@@ -1,0 +1,46 @@
+"""Batched serving example: sliding-window KV-cache decode for a
+mixtral-style MoE (the long_500k-capable configuration) with continuous
+batched greedy generation.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config, reduced
+from repro.models import init_params, init_cache, decode_step
+
+
+def main():
+    cfg = reduced(get_config("mixtral-8x7b"), d_model=128)
+    cfg = dataclasses.replace(cfg, sliding_window=32)  # ring-buffer cache
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    B, steps = 8, 64
+    cache = init_cache(cfg, B, steps, jnp.float32)
+    print(f"batch={B}, window={cfg.sliding_window}, "
+          f"cache k shape per layer: {cache['kv']['k'].shape[1:]} "
+          f"(ring buffer — O(window), not O(seq))")
+
+    step = jax.jit(lambda p, t, c, i: decode_step(p, t, c, i, cfg,
+                                                  compute_dtype=jnp.float32))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0, cfg.vocab_size)
+    t0 = time.time()
+    for i in range(steps):
+        logits, cache = step(params, tok, cache, i)
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"generated {B}x{steps} tokens in {dt:.2f}s "
+          f"({B * steps / dt:.0f} tok/s on CPU)")
+    print("last tokens:", tok[:, 0].tolist())
+
+
+if __name__ == "__main__":
+    main()

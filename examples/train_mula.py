@@ -1,0 +1,56 @@
+"""Paper Figure 1 reproduction (reduced scale): iso-compute dense vs MoE.
+
+Trains mula-1b-smoke (dense) and mula-7b-a1b-smoke (MoE with the same
+active-parameter compute) on the same synthetic corpus for the same number
+of steps and writes both loss curves. The paper's finding at full scale —
+"at iso compute MoE models are more accurate than dense models" — shows up
+here as the MoE curve dropping below the dense one.
+
+    PYTHONPATH=src python examples/train_mula.py [--steps 150]
+This is the end-to-end training driver deliverable (b): real data pipeline,
+checkpointing, NaN monitoring, scheduler — the full substrate.
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--out", default="runs/fig1")
+    args = ap.parse_args()
+
+    curves = {}
+    # iso-compute: dense d_ff = 2*d_model == MoE top-2 x (expert d_ff = d_model)
+    for arch, kw in (("mula-1b", {"d_ff": 2 * args.d_model}),
+                     ("mula-7b-a1b", {"moe_dff": args.d_model})):
+        print(f"\n=== training {arch} (reduced, iso-compute) ===")
+        hist = run(arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                   d_model=args.d_model, layers=args.layers,
+                   out=f"{args.out}/{arch}", **kw)
+        curves[arch] = [h["loss"] for h in hist]
+
+    with open(f"{args.out}/curves.json", "w") as f:
+        json.dump(curves, f)
+
+    d, m = curves["mula-1b"], curves["mula-7b-a1b"]
+    n = max(len(d) // 10, 1)
+    print("\nstep      dense(mula-1b)   moe(mula-7b-a1b)")
+    for i in range(0, len(d), n):
+        print(f"{i:5d}     {d[i]:8.4f}         {m[i]:8.4f}")
+    print(f"final     {d[-1]:8.4f}         {m[-1]:8.4f}")
+    print(f"\nMoE - dense final loss: {m[-1] - d[-1]:+.4f} "
+          f"(paper Fig 1: MoE lower at iso compute)")
+
+
+if __name__ == "__main__":
+    main()

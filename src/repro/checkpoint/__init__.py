@@ -1,0 +1,2 @@
+from .checkpointer import (Checkpointer, dp_scattered_writers,
+                           save_pytree, load_pytree)

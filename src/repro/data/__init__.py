@@ -1,0 +1,3 @@
+from .tokenizer import ByteTokenizer
+from .preprocess import preprocess_corpus
+from .loader import ShardedDataLoader

@@ -1,0 +1,56 @@
+"""mmap-mode shard loader (paper §4): lazy, contiguous per-DP-rank reads.
+
+Global step b consumes instances [b*GB, (b+1)*GB); DP rank r with per-rank
+batch size br reads the contiguous slice [b*GB + r*br, b*GB + (r+1)*br) —
+one contiguous region of (at most two) shard files.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+class ShardedDataLoader:
+    def __init__(self, data_dir: str, *, global_batch: int,
+                 dp_rank: int = 0, dp_size: int = 1):
+        with open(os.path.join(data_dir, "meta.json")) as f:
+            self.meta = json.load(f)
+        assert global_batch % dp_size == 0
+        self.global_batch = global_batch
+        self.rank_batch = global_batch // dp_size
+        self.dp_rank = dp_rank
+        self.dp_size = dp_size
+        self._mmaps = [np.load(os.path.join(data_dir, s), mmap_mode="r")
+                       for s in self.meta["shards"]]
+        self._sizes = np.array([m.shape[0] for m in self._mmaps])
+        self._offsets = np.concatenate([[0], np.cumsum(self._sizes)])
+        self.num_instances = int(self._offsets[-1])
+        self.steps_per_epoch = self.num_instances // global_batch
+
+    def _gather(self, start: int, count: int) -> np.ndarray:
+        """Contiguous instance range across shard boundaries."""
+        out = []
+        while count > 0:
+            k = int(np.searchsorted(self._offsets, start, side="right") - 1)
+            local = start - int(self._offsets[k])
+            take = min(count, int(self._sizes[k]) - local)
+            out.append(np.asarray(self._mmaps[k][local:local + take]))
+            start += take
+            count -= take
+        return np.concatenate(out, axis=0)
+
+    def batch(self, step: int) -> dict:
+        """(tokens, labels) for this DP rank at a global step (wraps per
+        epoch). Shapes: (rank_batch, context)."""
+        base = (step % self.steps_per_epoch) * self.global_batch
+        start = base + self.dp_rank * self.rank_batch
+        inst = self._gather(start, self.rank_batch).astype(np.int32)
+        return {"tokens": inst[:, :-1], "labels": inst[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

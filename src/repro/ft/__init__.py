@@ -1,0 +1,2 @@
+from .failures import (NaNMonitor, NodeFailure, ClusterManager,
+                       run_with_failure_handling)

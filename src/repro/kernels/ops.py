@@ -1,0 +1,243 @@
+"""Public jit'd wrappers for the Pallas kernels, with custom VJPs.
+
+* ``gmm(x, w, group_sizes)``      — Stage 4 grouped matmul. Backward:
+      dx = gmm(dy, swap(w)),  dw = tgmm(x, dy)  (both Pallas kernels).
+* ``combine(rows, weights)``      — Stage 5 output reduction; backward uses
+      the paper's fused backward kernel.
+* ``fused_swiglu(gate, up)``      — fused activation; analytic VJP.
+* ``token_counts(idx, n, off)``   — Stage 2 histogram (no gradient).
+
+``KERNEL_CONFIG`` holds the TPU tile sizes (MXU-aligned 128/512 defaults)
+and the interpret flag (True on CPU: kernels execute their Python bodies —
+how this container validates TPU kernels). Wrappers pad K/N dims up to tile
+multiples (zero-padding is exact for matmul) and slice back.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gmm import gmm_pallas, tgmm_pallas
+from .combine import combine_fwd_pallas, combine_bwd_pallas
+from .swiglu import swiglu_pallas
+from .moe_dispatch import token_counts_pallas
+
+KERNEL_CONFIG = {
+    "tile_m": 128,      # rows per m-tile — dispatch aligns groups to this
+    "tile_k": 512,
+    "tile_n": 512,
+    "interpret": None,  # None -> auto (True on CPU)
+}
+
+
+def _interpret() -> bool:
+    flag = KERNEL_CONFIG["interpret"]
+    if flag is None:
+        return jax.default_backend() == "cpu"
+    return bool(flag)
+
+
+def gmm_align() -> int:
+    """Group alignment the dispatch must honor for the Pallas backend."""
+    return KERNEL_CONFIG["tile_m"]
+
+
+def _pad_to(x, mult, axis):
+    r = (-x.shape[axis]) % mult
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, r)
+    return jnp.pad(x, pads)
+
+
+def _tile_group_ids(group_sizes: jax.Array, n_tiles: int, tile_m: int):
+    """tile -> group map (scalar prefetch). Requires group_sizes % tile_m == 0
+    (ensured by the dispatch's alignment). Tiles past sum(group_sizes) are
+    clamped to the last group; their rows are masked out by the callers."""
+    G = group_sizes.shape[0]
+    offsets = jnp.cumsum(group_sizes)
+    tile_starts = jnp.arange(n_tiles, dtype=jnp.int32) * tile_m
+    gids = jnp.searchsorted(offsets, tile_starts, side="right")
+    return jnp.minimum(gids, G - 1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# gmm with custom VJP
+# ----------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    return _gmm_fwd_impl(x, w, group_sizes)
+
+
+def _gmm_fwd_impl(x, w, group_sizes):
+    tm, tk, tn = (KERNEL_CONFIG["tile_m"], KERNEL_CONFIG["tile_k"],
+                  KERNEL_CONFIG["tile_n"])
+    M, K = x.shape
+    G, _, N = w.shape
+    tk = min(tk, K)
+    tn = min(tn, N)
+    xp = _pad_to(x, tk, 1)
+    wp = _pad_to(_pad_to(w, tk, 1), tn, 2)
+    n_tiles = M // tm
+    gids = _tile_group_ids(group_sizes, n_tiles, tm)
+    out = gmm_pallas(xp, wp, gids, tile_m=tm, tile_k=tk, tile_n=tn,
+                     interpret=_interpret())
+    # rows past sum(group_sizes) belong to no group -> zero (ref semantics)
+    total = jnp.sum(group_sizes)
+    out = out * (jnp.arange(M) < total)[:, None].astype(out.dtype)
+    return out[:, :N]
+
+
+def _gmm_fwd(x, w, group_sizes):
+    return _gmm_fwd_impl(x, w, group_sizes), (x, w, group_sizes)
+
+
+def _gmm_bwd(res, dy):
+    x, w, group_sizes = res
+    tm, tk, tn = (KERNEL_CONFIG["tile_m"], KERNEL_CONFIG["tile_k"],
+                  KERNEL_CONFIG["tile_n"])
+    M, K = x.shape
+    G, _, N = w.shape
+    # dx = gmm(dy, w^T)
+    dx = _gmm_fwd_impl(dy, jnp.swapaxes(w, 1, 2), group_sizes)
+    # dw[g] = x_g^T dy_g  (tgmm kernel)
+    tk2 = min(tk, N)
+    tn2 = min(tn, K)
+    dyp = _pad_to(dy, tk2, 1)       # K-dim of tgmm lhs is N of dy? see below
+    # tgmm: lhs = x (M,K), rhs = dy (M,N) -> out (G,K,N)
+    tkk = min(512, K)
+    tnn = min(512, N)
+    total = jnp.sum(group_sizes)
+    row_mask = (jnp.arange(M) < total)[:, None]
+    xp = _pad_to(x * row_mask.astype(x.dtype), tkk, 1)
+    dyp = _pad_to(dy * row_mask.astype(dy.dtype), tnn, 1)
+    gids = _tile_group_ids(group_sizes, M // tm, tm)
+    dw = tgmm_pallas(xp, dyp, gids, G, tile_m=tm, tile_k=tkk, tile_n=tnn,
+                     interpret=_interpret())
+    # groups with zero rows have no tiles -> their output block is never
+    # written (uninitialized); their true gradient is zero.
+    dw = jnp.where((group_sizes > 0)[:, None, None], dw, 0)
+    dw = dw[:, :K, :N].astype(w.dtype)
+    return dx.astype(x.dtype), dw, None
+
+
+gmm.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+# ----------------------------------------------------------------------------
+# combine with the paper's fused backward kernel
+# ----------------------------------------------------------------------------
+
+@jax.custom_vjp
+def combine(rows: jax.Array, weights: jax.Array) -> jax.Array:
+    return _combine_fwd_impl(rows, weights)
+
+
+def _tile_t(T):
+    for t in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if T % t == 0:
+            return t
+    return 1
+
+
+def _tile_d(D):
+    for t in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if D % t == 0:
+            return t
+    return 1
+
+
+def _combine_fwd_impl(rows, weights):
+    T, K, D = rows.shape
+    return combine_fwd_pallas(rows, weights, tile_t=_tile_t(T),
+                              tile_d=_tile_d(D), interpret=_interpret())
+
+
+def _combine_fwd(rows, weights):
+    return _combine_fwd_impl(rows, weights), (rows, weights)
+
+
+def _combine_bwd(res, dout):
+    rows, weights = res
+    T, K, D = rows.shape
+    drows, dw = combine_bwd_pallas(rows, weights, dout, tile_t=_tile_t(T),
+                                   tile_d=_tile_d(D), interpret=_interpret())
+    return drows, dw.astype(weights.dtype)
+
+
+combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+# ----------------------------------------------------------------------------
+# fused swiglu
+# ----------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fused_swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return _swiglu_impl(gate, up)
+
+
+def _swiglu_impl(gate, up):
+    M, N = gate.shape
+    return swiglu_pallas(gate, up, tile_m=_tile_t(M), tile_n=_tile_d(N),
+                         interpret=_interpret())
+
+
+def _swiglu_fwd(gate, up):
+    return _swiglu_impl(gate, up), (gate, up)
+
+
+def _swiglu_bwd(res, dout):
+    gate, up = res
+    g = gate.astype(jnp.float32)
+    sig = jax.lax.logistic(g)
+    silu = g * sig
+    dsilu = sig * (1 + g * (1 - sig))
+    dout32 = dout.astype(jnp.float32)
+    dgate = (dout32 * up.astype(jnp.float32) * dsilu).astype(gate.dtype)
+    dup = (dout32 * silu).astype(up.dtype)
+    return dgate, dup
+
+
+fused_swiglu.defvjp(_swiglu_fwd, _swiglu_bwd)
+
+
+# ----------------------------------------------------------------------------
+# token counts (Stage 2) — integer output, no gradient
+# ----------------------------------------------------------------------------
+
+def token_counts(indices: jax.Array, num_local: int, offset) -> jax.Array:
+    return token_counts_pallas(indices, num_local, offset,
+                               interpret=_interpret())
+
+
+# ----------------------------------------------------------------------------
+# flash attention (forward; training uses the pure-JAX blockwise path)
+# ----------------------------------------------------------------------------
+
+def ssd_intra_chunk(x, dt, Bm, Cm, A):
+    """Mamba-2 SSD intra-chunk stage (see kernels/ssd.py)."""
+    from .ssd import ssd_intra_chunk_pallas
+    return ssd_intra_chunk_pallas(x, dt, Bm, Cm, A, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512) -> jax.Array:
+    """q: (B, Sq, nh, hd); k/v: (B, Skv, nkv, hd). GQA kv heads are
+    broadcast to nh; heads fold into the batch for the kernel."""
+    from .flash_attention import flash_attention_pallas
+    B, Sq, nh, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * nh, a.shape[1], hd)
+    out = flash_attention_pallas(fold(q), fold(k), fold(v), causal=causal,
+                                 window=window, q_block=q_block,
+                                 kv_block=kv_block, interpret=_interpret())
+    return out.reshape(B, nh, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` targets).
+
+These define the *semantics*; the kernels in this package are tiled TPU
+implementations of exactly these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul (paper Stage 4). lhs: (M, K) rows grouped by expert;
+    rhs: (G, K, N); group_sizes: (G,) with sum <= M. Rows beyond
+    sum(group_sizes) produce zeros."""
+    return jax.lax.ragged_dot(lhs, rhs.astype(lhs.dtype), group_sizes)
+
+
+def tgmm_ref(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
+             num_groups: int) -> jax.Array:
+    """Transposed grouped matmul (Stage 4 weight gradient):
+    out[g] = lhs[rows of g].T @ rhs[rows of g]. lhs: (M, K); rhs: (M, N)."""
+    M = lhs.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(M)
+    # (G, M) membership mask
+    member = (row[None, :] >= starts[:, None]) & (row[None, :] < ends[:, None])
+    lhs_g = member[:, :, None] * lhs[None, :, :].astype(jnp.float32)
+    return jnp.einsum("gmk,mn->gkn", lhs_g,
+                      rhs.astype(jnp.float32)).astype(lhs.dtype)
+
+
+def token_counts_ref(indices: jax.Array, num_local: int,
+                     offset) -> jax.Array:
+    """Stage 2 histogram: count of flat routing choices per local expert."""
+    local = indices.astype(jnp.int32) - offset
+    valid = (local >= 0) & (local < num_local)
+    return jnp.bincount(jnp.where(valid, local, num_local),
+                        length=num_local + 1)[:num_local].astype(jnp.int32)
+
+
+def combine_ref(rows: jax.Array, weights: jax.Array) -> jax.Array:
+    """Stage 5 output reduction: rows (T, K, D), weights (T, K) ->
+    out (T, D) = sum_k weights[t,k] * rows[t,k,:]."""
+    return jnp.einsum("tkd,tk->td", rows, weights.astype(rows.dtype))
+
+
+def combine_bwd_ref(rows, weights, dout):
+    """Stage 5 backward (paper lines 98-113): gradients wrt expert rows and
+    router weights."""
+    drows = weights[..., None].astype(dout.dtype) * dout[:, None, :]
+    dw = jnp.einsum("tkd,td->tk", rows.astype(jnp.float32),
+                    dout.astype(jnp.float32)).astype(weights.dtype)
+    return drows, dw
+
+
+def swiglu_ref(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """Dense softmax attention. q: (BH, Sq, hd); k/v: (BH, Skv, hd)."""
+    import math as _m
+    Sq, Skv = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / _m.sqrt(q.shape[-1])
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (spec §MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) combination this lowers + compiles
+the appropriate step (train_step / prefill_step / serve_step) against the
+production mesh — 16x16 ("data","model") single-pod and 2x16x16
+("pod","data","model") multi-pod — using ShapeDtypeStruct stand-ins (no
+allocation), prints memory_analysis() and cost_analysis(), and derives the
+three roofline terms (launch/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           ParallelConfig, TrainConfig, get_config)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as RL
+from repro.launch.specs import input_specs, decode_input_specs, state_specs
+from repro.parallel.sharding import make_rules
+from repro.train.trainer import (make_train_step, make_prefill_step,
+                                 make_serve_step)
+
+# Per-arch parallel policy (DESIGN §6/§7). fsdp: shard params over the data
+# axes too (ZeRO-3) — required for 405B-class; microbatches bound activation
+# memory for the big training shapes.
+ARCH_PARALLEL = {
+    "llama3-405b": dict(fsdp=True, microbatches=16),
+    "dbrx-132b": dict(fsdp=True, microbatches=8),
+    "mixtral-8x7b": dict(fsdp=False, microbatches=4),
+    "moonshot-v1-16b-a3b": dict(fsdp=False, microbatches=2),
+    "zamba2-7b": dict(fsdp=False, microbatches=2),
+    "falcon-mamba-7b": dict(fsdp=False, microbatches=2),
+    "deepseek-7b": dict(fsdp=False, microbatches=2),
+    "starcoder2-3b": dict(fsdp=False, microbatches=1),
+    "seamless-m4t-medium": dict(fsdp=False, microbatches=1),
+    "phi-3-vision-4.2b": dict(fsdp=False, microbatches=1),
+    "mula-1b": dict(fsdp=False, microbatches=1),
+    "mula-7b-a1b": dict(fsdp=False, microbatches=1),
+    "mula-20b-a2b": dict(fsdp=False, microbatches=2),
+    "mula-100b-a7b": dict(fsdp=True, microbatches=4),
+    "mula-220b-a10b": dict(fsdp=True, microbatches=8),
+}
+
+# long_500k runs only for sub-quadratic archs (DESIGN §6)
+LONG_OK = {"zamba2-7b", "falcon-mamba-7b", "mixtral-8x7b", "starcoder2-3b"}
+
+
+def combos(archs=None):
+    archs = archs or ASSIGNED_ARCHS
+    for a in archs:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES.values():
+            if s.name == "long_500k" and a not in LONG_OK:
+                continue
+            if s.kind == "decode" and cfg.is_encoder_decoder and False:
+                continue  # enc-dec decode is supported (self+cross cache)
+            yield a, s
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              opt_mode: str = "epso", role=None, sac=None,
+              microbatches=None, verbose=True, moe_opts: dict = None):
+    cfg = get_config(arch)
+    if moe_opts and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_opts))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    pol = ARCH_PARALLEL.get(arch, {})
+    fsdp = pol.get("fsdp", False)
+    nmb = microbatches if microbatches is not None else (
+        pol.get("microbatches", 1) if shape.kind == "train" else 1)
+
+    rules = make_rules(cfg, mesh, kind=shape.kind, fsdp=fsdp, role=role,
+                       global_batch=shape.global_batch)
+    # microbatches must keep the per-microbatch batch shardable
+    shards = 1
+    for a in rules.batch_axes:
+        shards *= mesh.shape[a]
+    while nmb > 1 and shape.global_batch % (nmb * shards) != 0:
+        nmb //= 2
+    train = TrainConfig(param_dtype="bfloat16", compute_dtype="bfloat16",
+                        seq_len=shape.seq_len, global_batch=shape.global_batch)
+
+    if shape.kind == "train":
+        par = ParallelConfig(remat_policy=sac if sac is not None else "block",
+                             microbatches=nmb,
+                             optimizer_sharding=opt_mode)
+        step = make_train_step(cfg, par, train, rules=rules, mesh=mesh)
+        state = state_specs(cfg, train, rules, opt_mode)
+        batch = input_specs(cfg, shape, rules)
+        args = (state, batch)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, rules=rules, mesh=mesh)
+        params = state_specs(cfg, train, rules, opt_mode).params
+        batch = input_specs(cfg, shape, rules)
+        args = (params, batch)
+    else:  # decode
+        step = make_serve_step(cfg, rules=rules)
+        params = state_specs(cfg, train, rules, opt_mode).params
+        tokens, cache, index = decode_input_specs(cfg, shape, rules)
+        args = (params, tokens, cache, index)
+
+    t0 = time.time()
+    lowered = jax.jit(step).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    bytes_per_dev = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0)
+
+    # roofline terms via scan-free probes (launch/costmodel.py) — XLA's
+    # cost_analysis counts while bodies once, so the full module's numbers
+    # under-report by the trip counts; probes are exact.
+    from repro.launch import costmodel as CM
+    cm = CM.analyze(cfg, shape, rules, opt_mode=opt_mode,
+                    sac=sac if sac is not None else "block",
+                    microbatches=nmb)
+    rl = RL.Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        hlo_gflops_per_chip=cm["flops_per_chip"] / 1e9,
+        hlo_gbytes_per_chip=cm["bytes_per_chip"] / 1e9,
+        coll_gbytes_per_chip=cm["coll_per_chip"].get("total", 0.0) / 1e9,
+        compute_s=cm["flops_per_chip"] / RL.PEAK_FLOPS,
+        memory_s=cm["bytes_per_chip"] / RL.HBM_BW,
+        collective_s=cm["coll_per_chip"].get("total", 0.0) / RL.LINK_BW,
+        model_flops=RL.model_flops_estimate(cfg, shape),
+        bytes_per_device=bytes_per_dev,
+        coll_breakdown={k: v for k, v in cm["coll_per_chip"].items()
+                        if k != "total"})
+    rec = rl.row()
+    rec.update({
+        "opt_mode": opt_mode, "fsdp": fsdp, "microbatches": nmb,
+        "role": rules.tp_axis and "tp/etp" or (rules.ep_axis and "ep"),
+        "batch_axes": list(rules.batch_axes),
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {rec['mesh']}] "
+              f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        print(f"  memory_analysis: args={rec['arg_bytes']/2**30:.2f}GiB "
+              f"temp={rec['temp_bytes']/2**30:.2f}GiB "
+              f"out={rec['output_bytes']/2**30:.2f}GiB (per device)")
+        print(f"  cost_analysis: {rl.hlo_gflops_per_chip:.1f} GF/chip, "
+              f"{rl.hlo_gbytes_per_chip:.2f} GB/chip, "
+              f"coll {rl.coll_gbytes_per_chip:.3f} GB/chip")
+        print(f"  roofline: compute={rl.compute_s*1e3:.2f}ms "
+              f"memory={rl.memory_s*1e3:.2f}ms "
+              f"collective={rl.collective_s*1e3:.2f}ms "
+              f"-> dominant={rl.dominant} "
+              f"useful={rl.useful_flops_ratio:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt-mode", default="epso", choices=["so", "epso", "none"])
+    ap.add_argument("--sac", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--include-mula", action="store_true")
+    ap.add_argument("--moe-opts", default=None,
+                    help='JSON MoEConfig overrides, e.g. '
+                         '\'{"etp_shard_map": true}\'')
+    args = ap.parse_args()
+    moe_opts = json.loads(args.moe_opts) if args.moe_opts else None
+
+    records, failures = [], []
+    if args.all:
+        archs = list(ASSIGNED_ARCHS)
+        if args.include_mula:
+            archs += [a for a in ARCH_REGISTRY if a.startswith("mula")]
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for arch, shape in combos(archs):
+            for mp in meshes:
+                try:
+                    records.append(lower_one(arch, shape.name, multi_pod=mp,
+                                             opt_mode=args.opt_mode,
+                                             sac=args.sac,
+                                             microbatches=args.microbatches,
+                                             moe_opts=moe_opts))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape.name, mp, repr(e)[:200]))
+    else:
+        records.append(lower_one(args.arch, args.shape,
+                                 multi_pod=args.multi_pod,
+                                 opt_mode=args.opt_mode, sac=args.sac,
+                                 microbatches=args.microbatches,
+                                 moe_opts=moe_opts))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"dry-run ok: {len(records)} combination(s)")
+
+
+if __name__ == "__main__":
+    main()

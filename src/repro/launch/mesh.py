@@ -1,0 +1,23 @@
+"""Production mesh construction (spec: MULTI-POD DRY-RUN step 1).
+
+A function — not a module-level constant — so importing this module never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (1, n)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

@@ -1,0 +1,53 @@
+"""Render dryrun_results.json as the EXPERIMENTS.md §Roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:7.2f}s "
+    return f"{s * 1e3:7.1f}ms"
+
+
+def render(records, mesh=None):
+    rows = [r for r in records if mesh is None or r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = []
+    out.append("| arch | shape | mesh | compute | memory | collective | "
+               "dominant | useful | GF/chip | GB/chip | coll GB/chip | "
+               "peak GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        peak = (r.get("arg_bytes", 0) + r.get("temp_bytes", 0)) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_seconds(r['compute_s'])} | {fmt_seconds(r['memory_s'])} "
+            f"| {fmt_seconds(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['hlo_gflops_per_chip']:,.0f} "
+            f"| {r['hlo_gbytes_per_chip']:,.0f} "
+            f"| {r['coll_gbytes_per_chip']:,.1f} | {peak:,.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    with open(args.path) as f:
+        data = json.load(f)
+    print(render(data["records"], args.mesh))
+    if data.get("failures"):
+        print("\nFAILURES:")
+        for f_ in data["failures"]:
+            print(" ", f_)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Roofline-term derivation from compiled dry-run artifacts (spec §ROOFLINE).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` FLOPs/bytes on a SPMD module are per-device; we convert to
+global by multiplying by the device count. Collective bytes are parsed from
+the compiled HLO text: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction we take the (per-device) result
+shape and apply a ring-model factor using the replica-group size n:
+
+    all-gather          bytes = result x (n-1)/n          (received)
+    reduce-scatter      bytes = result x (n-1)            (operand streamed)
+    all-reduce          bytes = 2 x result x (n-1)/n      (RS + AG phases)
+    all-to-all          bytes = result x (n-1)/n
+    collective-permute  bytes = result
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (values given by the task spec).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9\[\],{}x ]+?)\s*(?:\))?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [ngroups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device communicated bytes by collective kind (ring model)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:   # async pair: count only the -start
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(type_str)
+        n = _group_size(line)
+        if kind == "all-gather":
+            b = rb * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = rb * (n - 1)
+        elif kind == "all-reduce":
+            b = 2 * rb * (n - 1) / n
+        elif kind == "all-to-all":
+            b = rb * (n - 1) / n
+        else:
+            b = rb
+        out[kind] += b
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops_per_chip: float
+    hlo_gbytes_per_chip: float
+    coll_gbytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0
+    bytes_per_device: float = 0.0
+    coll_breakdown: dict = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled HLO FLOPs — how much of the compiled
+        compute is 'useful' (catches remat/capacity/attention overhead)."""
+        total = self.hlo_gflops_per_chip * 1e9 * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_gflops_per_chip": self.hlo_gflops_per_chip,
+            "hlo_gbytes_per_chip": self.hlo_gbytes_per_chip,
+            "coll_gbytes_per_chip": self.coll_gbytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def derive(arch, shape, mesh_name, chips, cost, hlo_text,
+           model_flops=0.0, bytes_per_device=0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops_per_chip=flops / 1e9,
+        hlo_gbytes_per_chip=byts / 1e9,
+        coll_gbytes_per_chip=coll["total"] / 1e9,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll["total"] / LINK_BW,
+        model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+        coll_breakdown={k: v for k, v in coll.items() if k != "total"},
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training,
+    2·N·D for inference (fwd only), D = processed tokens."""
+    n = cfg.active_param_count()
+    seq = shape.seq_len
+    if getattr(cfg, "is_encoder_decoder", False):
+        seq = seq // 2    # enc/dec each see half the token budget
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * seq
+    return 2.0 * n * shape.global_batch          # decode: one token

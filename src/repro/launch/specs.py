@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct stand-ins for every model input/state (dry-run inputs:
+weak-type-correct, shardable, zero device allocation).
+
+``input_specs(cfg, shape, rules)`` — the training/prefill/serving batch.
+``state_specs`` — a sharded TrainState skeleton via ``jax.eval_shape``.
+``cache_specs`` — sharded KV/SSM cache skeleton for serve_step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape, TrainConfig
+from repro.models import init_cache
+from repro.parallel.sharding import ShardingRules, shardings
+from repro.optim.epso import optimizer_state_shardings
+from repro.train.trainer import TrainState, init_state
+
+
+def _sds(shape, dtype, rules: Optional[ShardingRules], spec: P):
+    if rules is None or rules.mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(rules.mesh, spec))
+
+
+def _batch_spec(rules, extra_dims: int) -> P:
+    b = rules.batch_axes if rules else ()
+    first = b if len(b) > 1 else (b[0] if b else None)
+    return P(*([first] + [None] * extra_dims))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                rules: Optional[ShardingRules] = None) -> dict:
+    """The batch pytree for the step this shape lowers (train / prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    bs1 = _batch_spec(rules, 1)
+    bs2 = _batch_spec(rules, 2)
+    if cfg.arch_type == "audio":
+        # enc-dec: half the budget as encoder frames, half as decoder tokens
+        half = S // 2
+        return {"frame_embeds": _sds((B, half, cfg.d_model), jnp.bfloat16,
+                                     rules, bs2),
+                "tokens": _sds((B, half), tok, rules, bs1),
+                "labels": _sds((B, half), tok, rules, bs1)}
+    if cfg.arch_type == "vlm":
+        text = S - cfg.num_prefix_embeds
+        return {"tokens": _sds((B, text), tok, rules, bs1),
+                "image_embeds": _sds((B, cfg.num_prefix_embeds, cfg.d_model),
+                                     jnp.bfloat16, rules, bs2),
+                "labels": _sds((B, text), tok, rules, bs1)}
+    return {"tokens": _sds((B, S), tok, rules, bs1),
+            "labels": _sds((B, S), tok, rules, bs1)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape,
+                       rules: Optional[ShardingRules] = None):
+    """(tokens, cache, index) stand-ins for serve_step at this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32, rules, _batch_spec(rules, 1))
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, jnp.bfloat16))
+    cache = jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, rules, s),
+        cache_shapes, cache_specs(cache_shapes, cfg, rules))
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, index
+
+
+def cache_specs(cache_shapes, cfg: ModelConfig,
+                rules: Optional[ShardingRules]):
+    """PartitionSpec tree for a (layer-stacked) cache pytree."""
+    if rules is None or rules.mesh is None:
+        return jax.tree.map(lambda _: P(), cache_shapes)
+    b = rules.batch_axes
+    batch = b if len(b) > 1 else (b[0] if b else None)
+    mdl = rules.tp_axis or rules.ep_axis
+
+    def spec_for(path_parts, leaf):
+        parts = [str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path_parts]
+        last = parts[-1] if parts else ""
+        path = "/".join(parts)
+        shp = leaf.shape
+        d = lambda i: mdl is not None and shp[i] % rules._axis_size(mdl) == 0
+        if last in ("k", "v"):                            # (L,B,S,nkv,hd)
+            return P(None, batch, None, mdl if d(3) else None, None)
+        if "memory" in path:                              # (B,S,d)
+            return P(batch, None, None)
+        if last == "conv":                                # (L,B,K-1,C)
+            return P(None, batch, None, mdl if d(3) else None)
+        if last == "h":
+            if len(shp) == 4:                             # mamba1 (L,B,di,ds)
+                return P(None, batch, mdl if d(2) else None, None)
+            return P(None, batch, mdl if d(2) else None, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def state_specs(cfg: ModelConfig, train: TrainConfig, rules: ShardingRules,
+                opt_mode: str = "epso"):
+    """Sharded ShapeDtypeStruct TrainState (zero allocation)."""
+    shapes = jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, train))
+    pshard = shardings(shapes.params, rules)
+    oshard = optimizer_state_shardings(shapes.params, rules, opt_mode)
+    if pshard is None:
+        return shapes
+
+    def mk(leaf, sh):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    params = jax.tree.map(mk, shapes.params, pshard)
+    rep = NamedSharding(rules.mesh, P())
+    opt = shapes.opt._replace(
+        step=mk(shapes.opt.step, rep),
+        master=jax.tree.map(mk, shapes.opt.master, oshard),
+        m=jax.tree.map(mk, shapes.opt.m, oshard),
+        v=jax.tree.map(mk, shapes.opt.v, oshard))
+    return TrainState(params, opt)

@@ -1,0 +1,93 @@
+"""Crash-isolated dry-run sweep: one subprocess per (arch x shape x mesh)
+combination, so an XLA fatal (F-check aborts the process, uncatchable in
+Python) costs one combo, not the sweep. Merges per-combo JSONs.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out dryrun_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.configs import ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES
+
+
+def combos(archs):
+    from repro.launch.dryrun import LONG_OK
+    for a in archs:
+        for s in INPUT_SHAPES.values():
+            if s.name == "long_500k" and a not in LONG_OK:
+                continue
+            yield a, s.name
+
+
+def run_one(arch, shape, multi_pod, extra, timeout):
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out = f.name
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out] + extra
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return None, f"timeout after {timeout}s"
+    if r.returncode != 0:
+        tail = (r.stderr or r.stdout).strip().splitlines()[-6:]
+        return None, f"rc={r.returncode}: " + " | ".join(tail)
+    try:
+        with open(out) as f:
+            rec = json.load(f)["records"][0]
+        rec["wall_s"] = round(time.time() - t0, 1)
+        return rec, None
+    except Exception as e:
+        return None, f"no record: {e}"
+    finally:
+        if os.path.exists(out):
+            os.unlink(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--include-mula", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1200)
+    ap.add_argument("--extra", nargs="*", default=[])
+    args = ap.parse_args()
+
+    archs = args.archs or list(ASSIGNED_ARCHS)
+    if args.include_mula:
+        archs += [a for a in ARCH_REGISTRY if a.startswith("mula")]
+
+    records, failures = [], []
+    meshes = [False] if args.single_pod_only else [False, True]
+    todo = [(a, s, mp) for a, s in combos(archs) for mp in meshes]
+    for i, (a, s, mp) in enumerate(todo):
+        tag = f"{a} x {s} @ {'2x16x16' if mp else '16x16'}"
+        rec, err = run_one(a, s, mp, list(args.extra), args.timeout)
+        if rec is None:
+            failures.append({"arch": a, "shape": s, "multi_pod": mp,
+                             "error": err})
+            print(f"[{i+1}/{len(todo)}] FAIL {tag}: {err}", flush=True)
+        else:
+            records.append(rec)
+            print(f"[{i+1}/{len(todo)}] ok   {tag} "
+                  f"({rec['wall_s']}s, dominant={rec['dominant']})",
+                  flush=True)
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"done: {len(records)} ok, {len(failures)} failed -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

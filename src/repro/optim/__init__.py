@@ -1,0 +1,3 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import warmup_cosine
+from .epso import optimizer_state_specs

@@ -1,0 +1,82 @@
+"""AdamW with BF16-mixed-precision semantics matching the paper (§1, §2.1):
+
+* bf16 weights/gradients in the fwd/bwd pass,
+* fp32 master weights + fp32 (m, v) optimizer states (16 bytes/param total),
+* bf16 gradient reduction (the paper deviates from OLMoE's fp32 reduction),
+* global-norm gradient clipping, optionally only after warmup (paper recipe),
+* decoupled weight decay applied to all parameters (paper: wd=0.1 on all).
+
+State layout: a pytree of per-parameter dicts {master, m, v}. Sharding of
+these states is what distinguishes SO from EPSO (see repro/optim/epso.py) —
+the update math is identical; pjit placement of the state does the rest.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # int32 scalar
+    master: dict               # fp32 master weights (pytree like params)
+    m: dict                    # fp32 first moment
+    v: dict                    # fp32 second moment
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(f32, params),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, *, lr, beta1=0.9, beta2=0.99,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0,
+                 clip_enabled=None, param_dtype=jnp.float32):
+    """One optimizer step. ``lr`` may be a traced scalar (schedule output).
+    ``clip_enabled``: optional traced bool (paper clips only after warmup).
+    Returns (new_params(param_dtype), new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > grad_clip, grad_clip / (gnorm + 1e-12), 1.0)
+    if grad_clip <= 0:
+        scale = 1.0
+    elif clip_enabled is not None:
+        scale = jnp.where(clip_enabled, scale, 1.0)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = beta1 * m + (1 - beta1) * g
+        v2 = beta2 * v + (1 - beta2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                    + weight_decay * master)
+        return new_master, m2, v2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v in
+           zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), new_master)
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, AdamWState(step, new_master, new_m, new_v), metrics

@@ -1,0 +1,121 @@
+"""Sharded Optimizer (SO) and EP-Aware Sharded Optimizer (EPSO) — paper §3.2.
+
+In JAX, optimizer-state *placement* is expressed as PartitionSpecs on the
+state pytree; XLA derives the paper's reduce-scatter (gradients) and
+all-gather (updated params) from the sharding mismatch between grads/params
+and states. The update math (repro/optim/adamw.py) is identical in both
+modes — exactly as in the paper, where EPSO changes only who owns which
+shard.
+
+* ``mode='so'``   — baseline: every state leaf is sharded across the DP axes
+  only (('pod','data')). A parameter that is replicated over the 'model'
+  axis keeps its states replicated over 'model' too — the EP-times waste the
+  paper identifies.
+* ``mode='epso'`` — states of 'model'-replicated parameters are additionally
+  sharded over 'model' (DP×EP-way, fine-grained sharding); states of
+  'model'-sharded parameters (the experts under EP, TP shards) keep their
+  model sharding and gain DP sharding on another dim — matching Figure 6.
+
+Greedy dim assignment: each extra mesh axis (or axis group) is placed on the
+largest divisible, still-unsharded dim of the leaf. Leaves too small to
+divide stay replicated (negligible memory).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import ShardingRules, param_specs
+
+
+def _augment(spec: P, shape, axes_groups, mesh) -> P:
+    """Add ``axes_groups`` (list of tuples of mesh axes) to a param spec."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    for group in axes_groups:
+        group = tuple(a for a in group if a not in used and a in mesh.shape)
+        if not group:
+            continue
+        size = 1
+        for a in group:
+            size *= mesh.shape[a]
+        # largest unsharded divisible dim
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if entries[i] is None and shape[i] % size == 0 and size > 1:
+                entries[i] = group if len(group) > 1 else group[0]
+                used.update(group)
+                break
+        else:
+            # try splitting the group (e.g. only 'data' fits, not 'model')
+            for a in group:
+                for i in order:
+                    if entries[i] is None and shape[i] % mesh.shape[a] == 0 \
+                            and mesh.shape[a] > 1:
+                        entries[i] = a
+                        used.add(a)
+                        break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def optimizer_state_specs(params, rules: ShardingRules, mode: str = "epso"):
+    """PartitionSpec pytree for each of master/m/v given the param tree."""
+    if rules.mesh is None:
+        return jax.tree.map(lambda _: P(), params)
+    mesh = rules.mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    pspecs = param_specs(params, rules)
+
+    def one(spec: P, leaf):
+        shape = leaf.shape
+        if mode == "so":
+            groups = [dp_axes]
+        elif mode == "epso":
+            # one joint group: DP axes + the model axis where the param is
+            # replicated over it; _augment skips axes already used by the
+            # param spec (model-sharded experts keep their sharding and gain
+            # DP on another dim).
+            groups = [dp_axes + (("model",) if "model" in mesh.shape else ())]
+        elif mode == "none":
+            return spec
+        else:
+            raise ValueError(mode)
+        return _augment(spec, shape, groups, mesh)
+
+    return jax.tree.map(one, pspecs, params)
+
+
+def optimizer_state_shardings(params, rules: ShardingRules, mode: str):
+    if rules.mesh is None:
+        return None
+    specs = optimizer_state_specs(params, rules, mode)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs)
+
+
+def state_bytes_per_device(params, rules: ShardingRules, mode: str) -> int:
+    """Analytic per-device bytes for the fp32 (master, m, v) states — the
+    EPSO-vs-SO memory comparison (paper Table 3 counterpart)."""
+    if rules.mesh is None:
+        total = sum(l.size for l in jax.tree.leaves(params))
+        return total * 12
+    mesh = rules.mesh
+    specs = optimizer_state_specs(params, rules, mode)
+
+    def shard_elems(spec, leaf):
+        n = leaf.size
+        denom = 1
+        for e in spec:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    denom *= mesh.shape[a]
+        return n // denom
+
+    per_dev = sum(jax.tree.leaves(
+        jax.tree.map(shard_elems, specs, params)))
+    return per_dev * 12    # 4B * (master + m + v)

@@ -1,0 +1,15 @@
+"""LR schedule from the paper (§2.1): linear warmup for ``warmup_steps`` to
+``lr_peak``, then cosine decay to ``lr_min`` over ``total_steps``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, lr_peak=4e-4, lr_min=4e-5, warmup_steps=2500,
+                  total_steps=630_000):
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr_peak * step / max(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = lr_min + 0.5 * (lr_peak - lr_min) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)

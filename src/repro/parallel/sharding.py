@@ -1,0 +1,251 @@
+"""Per-architecture sharding rules for the ('data','model') /
+('pod','data','model') production mesh (DESIGN §7).
+
+Roles of the 'model' axis:
+  * 'tp'  — Megatron tensor parallelism (dense/ssm/audio/vlm archs):
+            column-parallel wq/wk/wv + up/gate, row-parallel wo/down,
+            vocab-sharded embedding when divisible.
+  * 'ep'  — paper-faithful expert parallelism (MoE training): tokens sharded
+            over (pod, data, model); non-expert params replicated over
+            'model'; expert stacks sharded over 'model' (paper §1 EP).
+  * 'etp' — expert tensor parallelism: experts' d_ff sharded over 'model'
+            (used when num_experts doesn't divide the model-axis size, e.g.
+            mixtral 8e on a 16-way axis, and for inference shapes where the
+            batch is too small to span data×model).
+
+Optimizer-state sharding (paper §3.2):
+  * 'so'   — states sharded over DP only (the baseline Sharded Optimizer).
+  * 'epso' — EP-Aware: states of 'model'-replicated params additionally
+             sharded over the model axis (DP×EP-way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Optional[Mesh]
+    batch_axes: tuple            # mesh axes sharding the batch/token dim
+    tp_axis: Optional[str]       # 'model' when TP active, else None
+    ep_axis: Optional[str]       # 'model' when EP active, else None
+    fsdp: bool = False           # also shard params over data axes (ZeRO-3)
+    cfg: object = None           # ModelConfig (for divisibility checks)
+
+    # ---- helpers -----------------------------------------------------------
+    def _axis_size(self, ax) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[ax]
+
+    def _div(self, dim: int, ax) -> bool:
+        return ax is not None and dim % self._axis_size(ax) == 0
+
+    def constrain(self, x, name: str):
+        if self.mesh is None:
+            return x
+        spec = self.act_spec(name, x.shape)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def act_spec(self, name: str, shape) -> Optional[P]:
+        b = tuple(self.batch_axes)
+        batch = b if len(b) > 1 else (b[0] if b else None)
+        tp = self.tp_axis
+        if name == "act_btd":                       # (B,S,d) or (T,d)
+            return P(*([batch] + [None] * (len(shape) - 1)))
+        if name == "act_heads":                     # (B,S,H,hd)
+            hs = tp if self._div(shape[-2], tp) else None
+            return P(batch, None, hs, None)
+        if name == "act_kv_heads":
+            hs = tp if self._div(shape[-2], tp) else None
+            return P(batch, None, hs, None)
+        if name == "act_ff":                        # (B,S,f) or (T,f)
+            fs = tp if self._div(shape[-1], tp) else None
+            return P(*([batch] + [None] * (len(shape) - 2) + [fs]))
+        if name == "logits":                        # (B,S,V)
+            vs = tp if self._div(shape[-1], tp) else None
+            return P(*([batch] + [None] * (len(shape) - 2) + [vs]))
+        if name == "moe_pool":                      # (E, C, d)
+            cs = batch if self._div_batch(shape[1]) else None
+            return P(None, cs, None)
+        if name == "moe_hidden":                    # (E, C, f)
+            cs = batch if self._div_batch(shape[1]) else None
+            fs = tp if self._div(shape[-1], tp) else None
+            return P(None, cs, fs)
+        return None
+
+    def _div_batch(self, dim: int) -> bool:
+        if not self.batch_axes:
+            return False
+        return dim % self._axis_size(tuple(self.batch_axes)) == 0
+
+
+def resolve_batch_axes(global_batch: Optional[int], mesh: Mesh,
+                       candidates: tuple) -> tuple:
+    """Greedy: drop axes (from the left) until the batch divides the product.
+    A batch too small for the full mesh stays replicated on the dropped axes
+    (the dry-run reports the resulting waste honestly)."""
+    if global_batch is None:
+        return candidates
+    axes = list(candidates)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if global_batch % n == 0:
+            return tuple(axes)
+        axes.pop(0)
+    return ()
+
+
+def make_rules(cfg, mesh: Optional[Mesh], *, role: Optional[str] = None,
+               kind: str = "train", fsdp: Optional[bool] = None,
+               global_batch: Optional[int] = None) -> ShardingRules:
+    """Resolve the model-axis role for (arch, input-shape-kind)."""
+    if mesh is None:
+        return ShardingRules(None, (), None, None, cfg=cfg)
+    axes = list(mesh.shape.keys())
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    has_model = "model" in axes
+
+    if role is None:
+        if cfg.is_moe:
+            role = "ep" if kind == "train" else "etp"
+        else:
+            role = "tp"
+    if role == "ep" and cfg.is_moe and has_model:
+        ep_ok = cfg.moe.num_experts % mesh.shape["model"] == 0
+        if not ep_ok:
+            role = "etp"    # e.g. mixtral 8e on 16-way axis
+    if role == "ep":
+        batch = resolve_batch_axes(global_batch, mesh, data_axes + ("model",))
+        if "model" not in batch:
+            # batch not divisible across data x model: tokens are resharded
+            # over 'model' inside the MoE block instead (shard_map in_specs)
+            batch = resolve_batch_axes(global_batch, mesh, data_axes)
+        return ShardingRules(mesh, batch, None, "model",
+                             fsdp=bool(fsdp), cfg=cfg)
+    batch = resolve_batch_axes(global_batch, mesh, data_axes)
+    tp = "model" if has_model else None
+    return ShardingRules(mesh, batch, tp, None, fsdp=bool(fsdp), cfg=cfg)
+
+
+# ----------------------------------------------------------------------------
+# parameter PartitionSpecs (pattern-matched on tree paths)
+# ----------------------------------------------------------------------------
+
+def _param_spec(path: str, shape, rules: ShardingRules) -> P:
+    tp, ep = rules.tp_axis, rules.ep_axis
+    mdl = tp or ep   # the model axis name if any role is active
+    d = rules._div
+
+    def fsdp_wrap(spec: P) -> P:
+        """Optionally add data-axis sharding on the largest unsharded dim
+        (ZeRO-3/FSDP for 405B-class models)."""
+        if not rules.fsdp or rules.mesh is None:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        data_axes = tuple(a for a in ("pod", "data") if a in rules.mesh.shape)
+        if not data_axes:
+            return spec
+        n = rules._axis_size(data_axes)
+        # pick the largest dim that is unsharded and divisible
+        cand = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cand:
+            if entries[i] is None and shape[i] % n == 0:
+                entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return P(*entries)
+        return spec
+
+    # ---- MoE expert stacks (E, d, f) / (E, f, d) ----------------------------
+    if any(k in path for k in ("/moe/gate", "/moe/up", "/moe/down")) \
+            and "shared" not in path and len(shape) == 3:
+        if ep is not None and d(shape[0], ep):
+            return fsdp_wrap(P(ep, None, None))
+        if tp is not None:
+            ff_dim = 2 if "down" not in path else 1
+            if d(shape[ff_dim], tp):
+                e = [None, None, None]
+                e[ff_dim] = tp
+                return fsdp_wrap(P(*e))
+        return fsdp_wrap(P(None, None, None))
+    if "/moe/router" in path:
+        return fsdp_wrap(P(None, None))
+
+    # ---- embeddings / head ---------------------------------------------------
+    # (no fsdp_wrap: gathers from two-axis-sharded tables trip an XLA SPMD
+    #  partitioner bug — "Invalid binary instruction opcode copy" — and the
+    #  vocab-sharded table is already small per device)
+    if path.endswith("embed/table") or path.endswith("head/table"):
+        if d(shape[0], mdl):
+            return P(mdl, None)
+        return P(None, None)
+
+    # ---- attention -------------------------------------------------------------
+    if any(path.endswith(s) for s in ("/wq", "/wk", "/wv")):
+        return fsdp_wrap(P(None, tp) if d(shape[1], tp) else P(None, None))
+    if path.endswith("/wo"):
+        return fsdp_wrap(P(tp, None) if d(shape[0], tp) else P(None, None))
+
+    # ---- dense MLP (also shared experts) ----------------------------------------
+    if any(path.endswith(s) for s in ("/up", "/gate")) and len(shape) == 2:
+        return fsdp_wrap(P(None, tp) if d(shape[1], tp) else P(None, None))
+    if path.endswith("/down") and len(shape) == 2:
+        return fsdp_wrap(P(tp, None) if d(shape[0], tp) else P(None, None))
+
+    # ---- SSM mixers ---------------------------------------------------------------
+    if path.endswith("/in_proj"):
+        return fsdp_wrap(P(None, tp) if d(shape[1], tp) else P(None, None))
+    if path.endswith("/out_proj"):
+        return fsdp_wrap(P(tp, None) if d(shape[0], tp) else P(None, None))
+    if path.endswith("/conv_w") or path.endswith("/x_proj") or \
+            path.endswith("/dt_proj"):
+        return fsdp_wrap(P(*([None] * len(shape))))
+
+    # everything else (norms, biases, A_log, D, ...): replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, rules: ShardingRules):
+    """PartitionSpec pytree for a param tree. Layer-stacked leaves have a
+    leading layer dim — specs are computed on the per-layer shape and shifted."""
+    def spec_for(path_parts, leaf):
+        path = "/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path_parts)
+        shape = leaf.shape
+        # stacked layer dims: any leading dims tagged by path containing
+        # 'layers'/'groups'/'rem' get None entries prepended.
+        n_stack = 0
+        if any(seg in path for seg in ("layers/", "groups/", "rem/",
+                                       "enc_layers/", "dec_layers/")):
+            n_stack = 1
+            if "groups/" in path:
+                n_stack = 2        # (G, every, ...)
+        inner_shape = shape[n_stack:]
+        # normalize the path so _param_spec's endswith-matching sees the
+        # module-local names
+        spec = _param_spec(path, inner_shape, rules)
+        return P(*([None] * n_stack + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings(params, rules: ShardingRules):
+    if rules.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        param_specs(params, rules))

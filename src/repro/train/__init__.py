@@ -1,0 +1,1 @@
+from .trainer import TrainState, make_train_step, make_serve_step, init_state

@@ -1,0 +1,116 @@
+"""Training / serving steps.
+
+``train_step`` implements the paper's recipe (§2.1): bf16 fwd/bwd on bf16
+params, bf16 gradient reduction, fp32 master weights + AdamW states (held in
+the optimizer state, sharded per SO/EPSO), warmup+cosine LR, global-norm
+clipping enabled only after warmup, gradient accumulation over microbatches
+via ``lax.scan``, SAC remat policies.
+
+``serve_step`` is single-token decode against a KV/SSM cache (the lowering
+target for decode_32k / long_500k); ``prefill_step`` is the forward pass for
+prefill_32k.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import init_params, loss_fn, forward, init_cache, decode_step
+from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: dict          # compute-precision params (bf16 in production)
+    opt: AdamWState       # fp32 master + moments
+
+
+def init_state(rng, cfg: ModelConfig, train: TrainConfig) -> TrainState:
+    params = init_params(rng, cfg)
+    opt = adamw_init(params)
+    pd = jnp.dtype(train.param_dtype)
+    params = jax.tree.map(lambda p: p.astype(pd), params)
+    return TrainState(params, opt)
+
+
+def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
+                    train: TrainConfig, *, rules=None, mesh=None):
+    cd = jnp.dtype(train.compute_dtype)
+    pd = jnp.dtype(train.param_dtype)
+    rd = jnp.dtype(train.grad_reduce_dtype)
+    nmb = parallel.microbatches
+
+    def loss_for(params, mb):
+        return loss_fn(params, mb, cfg, rules=rules, mesh=mesh,
+                       sac=parallel.remat_policy, compute_dtype=cd)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        if nmb > 1:
+            def split(x):
+                return x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                gacc, lacc, macc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_for, has_aux=True)(params, mb)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    gacc, grads)
+                return (gacc, lacc + loss, macc + metrics["ce"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss, ce), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss, ce = loss / nmb, ce / nmb
+            metrics = {"ce": ce}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+
+        # paper: bf16 gradient reduction (cast before the DP reduction that
+        # XLA derives from the state shardings), fp32 update
+        grads = jax.tree.map(lambda g: g.astype(rd).astype(jnp.float32),
+                             grads)
+
+        lr = warmup_cosine(state.opt.step, lr_peak=train.lr_peak,
+                           lr_min=train.lr_min,
+                           warmup_steps=train.warmup_steps,
+                           total_steps=train.total_steps)
+        clip_on = None
+        if train.clip_after_warmup_only:
+            clip_on = state.opt.step >= train.warmup_steps
+        new_params, new_opt, om = adamw_update(
+            grads, state.opt, lr=lr, beta1=train.beta1, beta2=train.beta2,
+            eps=train.eps, weight_decay=train.weight_decay,
+            grad_clip=train.grad_clip, clip_enabled=clip_on, param_dtype=pd)
+        out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
+        return TrainState(new_params, new_opt), out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, rules=None, mesh=None,
+                      compute_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        logits, _ = forward(params, batch, cfg, rules=rules, mesh=mesh,
+                            sac="", compute_dtype=compute_dtype)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, rules=None,
+                    compute_dtype=jnp.bfloat16):
+    def serve_step(params, tokens, cache, index):
+        return decode_step(params, tokens, cache, index, cfg, rules=rules,
+                           compute_dtype=compute_dtype)
+
+    return serve_step

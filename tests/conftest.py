@@ -1,0 +1,15 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in a separate process; never set device-count flags here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

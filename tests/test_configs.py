@@ -1,0 +1,58 @@
+"""Config registry: every assigned arch present, Table 1 counts reproduced."""
+import pytest
+
+from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           get_config, reduced)
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a
+        assert cfg.citation
+
+
+def test_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+# paper Table 1 totals (billions) with tolerance
+TABLE1 = {"mula-1b": (1.3, 1.3), "mula-7b-a1b": (6.9, 1.3),
+          "mula-20b-a2b": (20, 2.4), "mula-100b-a7b": (100, 7.6),
+          "mula-220b-a10b": (220, 10)}
+
+
+@pytest.mark.parametrize("name,expect", TABLE1.items())
+def test_mula_param_counts_match_table1(name, expect):
+    cfg = get_config(name)
+    total, active = expect
+    assert abs(cfg.param_count() / 1e9 - total) / total < 0.08
+    assert abs(cfg.active_param_count() / 1e9 - active) / active < 0.08
+
+
+@pytest.mark.parametrize("name,total", [
+    ("dbrx-132b", 132), ("mixtral-8x7b", 46.7), ("llama3-405b", 405)])
+def test_public_param_counts(name, total):
+    assert abs(get_config(name).param_count() / 1e9 - total) / total < 0.05
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_configs_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+def test_long_500k_applicability():
+    """DESIGN §6: sub-quadratic archs only."""
+    runs = [a for a in ASSIGNED_ARCHS
+            if get_config(a).supports_long_decode]
+    assert set(runs) == {"zamba2-7b", "falcon-mamba-7b", "mixtral-8x7b",
+                         "starcoder2-3b"}

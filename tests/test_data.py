@@ -1,0 +1,73 @@
+"""Data pipeline (paper §4): tokenize -> shuffle -> shard -> mmap loading."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import ByteTokenizer, ShardedDataLoader, preprocess_corpus
+
+
+@pytest.fixture
+def corpus():
+    rng = np.random.default_rng(0)
+    return [[f"document {i}-{j} " + "x" * int(rng.integers(10, 90))
+             for j in range(20)] for i in range(3)]
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "hello Aurora 🙂"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_preprocess_deterministic(tmp_path, corpus):
+    m1 = preprocess_corpus(corpus, str(tmp_path / "a"), context=32, seed=7)
+    m2 = preprocess_corpus(corpus, str(tmp_path / "b"), context=32, seed=7)
+    a = np.load(tmp_path / "a" / m1["shards"][0])
+    b = np.load(tmp_path / "b" / m2["shards"][0])
+    assert np.array_equal(a, b)
+    m3 = preprocess_corpus(corpus, str(tmp_path / "c"), context=32, seed=8)
+    c = np.load(tmp_path / "c" / m3["shards"][0])
+    assert not np.array_equal(a, c)          # different shuffle
+
+
+def test_instances_cover_corpus_once(tmp_path, corpus):
+    """The shuffle is a permutation: every instance appears exactly once."""
+    meta = preprocess_corpus(corpus, str(tmp_path / "d"), context=16, seed=0,
+                             shard_instances=7)
+    loaded = np.concatenate([np.load(tmp_path / "d" / s)
+                             for s in meta["shards"]])
+    assert loaded.shape == (meta["num_instances"], 17)
+    # rebuild unshuffled instances and compare as multisets of rows
+    from repro.data.preprocess import tokenize_files
+    step = 17
+    rows = []
+    for t in tokenize_files(corpus):
+        n = len(t) // step
+        rows.append(t[:n * step].reshape(n, step))
+    ref = np.concatenate(rows)
+    assert sorted(map(tuple, loaded.tolist())) == sorted(map(tuple,
+                                                             ref.tolist()))
+
+
+def test_loader_contiguous_dp_reads(tmp_path, corpus):
+    """DP ranks read disjoint contiguous slices covering each step's batch."""
+    preprocess_corpus(corpus, str(tmp_path / "e"), context=16, seed=0,
+                      shard_instances=5)
+    full = ShardedDataLoader(str(tmp_path / "e"), global_batch=8)
+    parts = [ShardedDataLoader(str(tmp_path / "e"), global_batch=8,
+                               dp_rank=r, dp_size=4) for r in range(4)]
+    for step in (0, 1, full.steps_per_epoch - 1):
+        whole = full.batch(step)["tokens"]
+        stitched = np.concatenate([p.batch(step)["tokens"] for p in parts])
+        assert np.array_equal(whole, stitched)
+
+
+def test_loader_mmap_mode(tmp_path, corpus):
+    meta = preprocess_corpus(corpus, str(tmp_path / "f"), context=16, seed=0)
+    dl = ShardedDataLoader(str(tmp_path / "f"), global_batch=4)
+    assert isinstance(dl._mmaps[0], np.memmap)   # lazy mmap loading
+    b = dl.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

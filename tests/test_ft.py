@@ -1,0 +1,57 @@
+"""Fault tolerance (paper §4): NaN (soft) detection, buffer-node replacement
+(hard), and end-to-end recovery through the dual checkpointer."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.ft import (ClusterManager, NaNMonitor, NodeFailure,
+                      run_with_failure_handling)
+
+
+def test_nan_monitor_flags_rank():
+    mon = NaNMonitor()
+    mon.check([1.0, 2.0, 0.5])                      # fine
+    with pytest.raises(NodeFailure) as e:
+        mon.check([1.0, float("nan"), 0.5])
+    assert e.value.node_id == 1 and e.value.kind == "soft"
+    with pytest.raises(NodeFailure):
+        mon.check([1.0, 1.0], per_rank_grad_norms=[1.0, float("inf")])
+
+
+def test_cluster_replace_uses_buffers():
+    cm = ClusterManager(n_active=4, n_buffer=2)
+    repl = cm.replace(2)
+    assert repl.node_id == 4
+    assert [n.node_id for n in cm.active] == [0, 1, 4, 3]
+    cm.replace(0)
+    assert not cm.buffers
+    with pytest.raises(RuntimeError):
+        cm.replace(1)                                # buffers exhausted
+
+
+def test_run_recovers_from_soft_and_hard_failures(tmp_path):
+    """Full launcher loop: a hard failure at step 7 and a soft (NaN) at
+    step 12 are both recovered via buffer nodes + last valid checkpoint."""
+    ck = Checkpointer(str(tmp_path), interval=5)
+    cluster = ClusterManager(n_active=4, n_buffer=2)
+    calls = {"hard_done": False, "soft_done": False}
+
+    def train_one_step(state, step):
+        if step == 7 and not calls["hard_done"]:
+            calls["hard_done"] = True
+            raise NodeFailure(3, "hard")
+        if step == 12 and not calls["soft_done"]:
+            calls["soft_done"] = True
+            return state, {"per_rank_losses": [1.0, float("nan")]}
+        new = {"p": {"w": np.asarray(state["p"]["w"]) + 1.0}}
+        return new, {"loss": 1.0, "per_rank_losses": [1.0, 1.0]}
+
+    state0 = {"p": {"w": np.zeros(2)}}
+    state, step, relaunches = run_with_failure_handling(
+        train_one_step, state=state0, checkpointer=ck, cluster=cluster,
+        num_steps=20)
+    assert step == 20
+    assert relaunches == 2
+    assert len(cluster.replaced) == 2
+    # soft failure consumed a NaN step but training still completed
+    assert calls["hard_done"] and calls["soft_done"]

@@ -1,0 +1,127 @@
+"""Per-kernel validation vs ref.py oracles (interpret mode) with
+shape/dtype sweeps + hypothesis property tests (spec deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(autouse=True)
+def small_tiles():
+    old = dict(ops.KERNEL_CONFIG)
+    ops.KERNEL_CONFIG["tile_m"] = 8
+    yield
+    ops.KERNEL_CONFIG.update(old)
+
+
+def _groups(rng, G, M, align):
+    """Random aligned group sizes summing <= M."""
+    cuts = np.sort(rng.integers(0, M // align + 1, size=G - 1)) * align
+    sizes = np.diff(np.concatenate([[0], cuts, [M]]))
+    return jnp.array(sizes, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("G,M,K,N", [(4, 64, 24, 40), (2, 32, 128, 128),
+                                     (8, 128, 16, 8)])
+def test_gmm_forward_sweep(dtype, G, M, K, N):
+    rng = np.random.default_rng(0)
+    gs = _groups(rng, G, M, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (G, K, N), dtype)
+    out = ops.gmm(x, w, gs)
+    expect = ref.gmm_ref(x, w, gs)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_gmm_gradients_match_ref():
+    rng = np.random.default_rng(1)
+    gs = _groups(rng, 4, 64, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 24))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 24, 40))
+    g1 = jax.grad(lambda x, w: (ops.gmm(x, w, gs) ** 2).sum(),
+                  argnums=(0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: (ref.gmm_ref(x, w, gs) ** 2).sum(),
+                  argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(g1[0], g2[0], atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], atol=1e-3)
+
+
+def test_gmm_empty_group_grad_is_zero():
+    gs = jnp.array([0, 32, 0, 32], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+    dw = jax.grad(lambda w: (ops.gmm(x, w, gs) ** 2).sum())(w)
+    assert np.all(np.isfinite(dw))
+    np.testing.assert_allclose(dw[0], 0.0)
+    np.testing.assert_allclose(dw[2], 0.0)
+
+
+@pytest.mark.parametrize("T,K,D", [(32, 2, 48), (64, 8, 16), (16, 1, 512)])
+def test_combine_kernel(T, K, D):
+    rows = jax.random.normal(jax.random.PRNGKey(0), (T, K, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (T, K))
+    np.testing.assert_allclose(ops.combine(rows, w),
+                               ref.combine_ref(rows, w), atol=1e-4)
+    g1 = jax.grad(lambda r, w: (ops.combine(r, w) ** 2).sum(),
+                  argnums=(0, 1))(rows, w)
+    g2 = jax.grad(lambda r, w: (ref.combine_ref(r, w) ** 2).sum(),
+                  argnums=(0, 1))(rows, w)
+    np.testing.assert_allclose(g1[0], g2[0], atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], atol=1e-3)
+
+
+def test_combine_bwd_matches_paper_formulas():
+    """Stage 5 backward (paper lines 98-113): explicit formula check."""
+    rows = jax.random.normal(jax.random.PRNGKey(0), (8, 2, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 2))
+    dout = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    _, vjp = jax.vjp(ops.combine, rows, w)
+    drows, dw = vjp(dout)
+    drows_ref, dw_ref = ref.combine_bwd_ref(rows, w, dout)
+    np.testing.assert_allclose(drows, drows_ref, atol=1e-5)
+    np.testing.assert_allclose(dw, dw_ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("M,N", [(32, 48), (8, 512), (128, 16)])
+def test_swiglu_kernel(M, N):
+    g = jax.random.normal(jax.random.PRNGKey(0), (M, N))
+    u = jax.random.normal(jax.random.PRNGKey(1), (M, N))
+    np.testing.assert_allclose(ops.fused_swiglu(g, u), ref.swiglu_ref(g, u),
+                               atol=1e-5)
+    s1 = jax.grad(lambda g, u: (ops.fused_swiglu(g, u) ** 2).sum(),
+                  argnums=(0, 1))(g, u)
+    s2 = jax.grad(lambda g, u: (ref.swiglu_ref(g, u) ** 2).sum(),
+                  argnums=(0, 1))(g, u)
+    np.testing.assert_allclose(s1[0], s2[0], atol=1e-4)
+    np.testing.assert_allclose(s1[1], s2[1], atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 16), st.integers(0, 20))
+def test_token_counts_property(n, e, off):
+    """Histogram == bincount for arbitrary index streams/offsets."""
+    idx = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, e + off + 3)
+    got = ops.token_counts(idx, e, off)
+    expect = ref.token_counts_ref(idx, e, off)
+    assert np.array_equal(np.array(got), np.array(expect))
+    assert int(got.sum()) <= n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 8))
+def test_gmm_matches_blockdiag_property(G, nblk):
+    """gmm == block-diagonal dense matmul for any aligned group layout."""
+    rng = np.random.default_rng(G * 31 + nblk)
+    M = nblk * 8 * G
+    gs = _groups(rng, G, M, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, 12))
+    w = jax.random.normal(jax.random.PRNGKey(1), (G, 12, 20))
+    np.testing.assert_allclose(ops.gmm(x, w, gs), ref.gmm_ref(x, w, gs),
+                               atol=1e-4)

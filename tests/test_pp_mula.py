@@ -1,0 +1,64 @@
+"""Paper-faithful pipeline parallelism on real Mula blocks: the Mula-220B
+configuration trains with PP=8 + 1f1b (paper §2.2); this integration test
+runs its reduced variant through the actual PP executor with real MoE
+transformer stages and checks gradient equivalence with sequential
+execution."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.models.model import _moe_block
+from repro.parallel import pipeline as PP
+
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+def test_mula_pp_stages_match_sequential(sched):
+    cfg = reduced(get_config("mula-220b-a10b"), layers=4, d_model=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    stages = PP.split_stages(params["layers"], pp=4)   # 1 layer per stage
+
+    def stage_fwd(sp, x):
+        def body(h, lp):
+            h, _, _ = _moe_block(lp, h, cfg, None, "", None)
+            return h, None
+        x, _ = jax.lax.scan(body, x, sp)
+        return x
+
+    def loss_fn(y, mb):
+        return (y.astype(jnp.float32) ** 2).mean()
+
+    rng = jax.random.PRNGKey(1)
+    mbs = [{"x": jax.random.normal(jax.random.fold_in(rng, i), (2, 8, 64))}
+           for i in range(8)]
+    loss, grads = PP.pipeline_train_step(stage_fwd, loss_fn, stages, mbs,
+                                         sched)
+
+    def ref(stage_params):
+        tot = 0.0
+        for mb in mbs:
+            x = mb["x"]
+            for sp in stage_params:
+                x = stage_fwd(sp, x)
+            tot += loss_fn(x, mb)
+        return tot / len(mbs)
+
+    rl, rg = jax.value_and_grad(ref)(stages)
+    np.testing.assert_allclose(float(loss), float(rl), rtol=1e-5)
+    for g, r in zip(grads, rg):
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(r)):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_mula_220b_paper_pp_config():
+    """Paper: Mula-220B trained with PP=8, 1f1b, EP=12 within node. The
+    schedule for its setup is valid and has the 1f1b memory profile."""
+    n_mb = 16
+    t = PP.one_f_one_b_schedule(n_mb, 8)
+    PP.validate_schedule(t, n_mb, 8)
+    assert PP.peak_inflight(t, 0) == 8
+    assert PP.bubble_fraction(n_mb, 8) == pytest.approx(7 / 23)
