@@ -19,11 +19,13 @@ def main() -> None:
                     help="subset of bench names (fsmoe epso scaling loss kernels)")
     args = ap.parse_args()
 
+    from repro import compat as _compat  # noqa: F401  old-jax shims
+
     from . import (bench_epso, bench_fsmoe, bench_kernels, bench_loss,
-                   bench_scaling)
+                   bench_scaling, bench_serve)
     benches = {"kernels": bench_kernels, "epso": bench_epso,
                "scaling": bench_scaling, "fsmoe": bench_fsmoe,
-               "loss": bench_loss}
+               "loss": bench_loss, "serve": bench_serve}
     if args.only:
         benches = {k: v for k, v in benches.items() if k in args.only}
 

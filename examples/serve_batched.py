@@ -1,6 +1,8 @@
-"""Batched serving example: sliding-window KV-cache decode for a
-mixtral-style MoE (the long_500k-capable configuration) with continuous
-batched greedy generation.
+"""Continuous-batching serving example: a mixtral-style MoE with a
+sliding-window ring KV cache behind the ServeEngine — requests with
+different prompt lengths, generation lengths, and sampling params share a
+fixed slot batch; finished requests are evicted and the freed slots
+re-admit queued ones mid-flight.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,12 +11,13 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 sys.path.insert(0, "src")
 
 from repro.configs import get_config, reduced
-from repro.models import init_params, init_cache, decode_step
+from repro.models import init_params
+from repro.serve import SamplingParams, ServeEngine
 
 
 def main():
@@ -22,24 +25,31 @@ def main():
     cfg = dataclasses.replace(cfg, sliding_window=32)  # ring-buffer cache
     params = init_params(jax.random.PRNGKey(0), cfg)
 
-    B, steps = 8, 64
-    cache = init_cache(cfg, B, steps, jnp.float32)
-    print(f"batch={B}, window={cfg.sliding_window}, "
-          f"cache k shape per layer: {cache['kv']['k'].shape[1:]} "
+    engine = ServeEngine(params, cfg, num_slots=4, max_len=128)
+    print(f"slots={engine.pool.num_slots}, window={cfg.sliding_window}, "
+          f"cache k shape per layer: {engine.pool.cache['kv']['k'].shape[1:]} "
           f"(ring buffer — O(window), not O(seq))")
 
-    step = jax.jit(lambda p, t, c, i: decode_step(p, t, c, i, cfg,
-                                                  compute_dtype=jnp.float32))
-    tok = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0, cfg.vocab_size)
+    rng = np.random.RandomState(0)
+    n_requests = 12
+    for i in range(n_requests):
+        prompt = rng.randint(1, cfg.vocab_size, size=rng.randint(4, 24))
+        engine.submit(
+            prompt.tolist(),
+            max_new_tokens=int(rng.randint(8, 32)),
+            sampling=SamplingParams(temperature=0.7 if i % 2 else 0.0,
+                                    top_k=32, top_p=0.95, seed=i))
+
     t0 = time.time()
-    for i in range(steps):
-        logits, cache = step(params, tok, cache, i)
-        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1).astype(jnp.int32)
-    jax.block_until_ready(tok)
+    results = engine.run()
     dt = time.time() - t0
-    print(f"generated {B}x{steps} tokens in {dt:.2f}s "
-          f"({B * steps / dt:.0f} tok/s on CPU)")
-    print("last tokens:", tok[:, 0].tolist())
+    print(f"served {n_requests} requests / {engine.tokens_generated} tokens "
+          f"in {engine.steps} engine steps, {dt:.2f}s "
+          f"({engine.tokens_generated / dt:.0f} tok/s on CPU)")
+    for rid in sorted(results)[:4]:
+        r = results[rid]
+        print(f"  req {rid}: prompt={r.prompt_len} -> {len(r.tokens)} tokens "
+              f"({r.finish_reason}): {r.tokens[:8]}...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Version-compat shims for the installed jax.
+
+The codebase (and its tests) target the modern ``jax.sharding`` surface:
+
+* ``jax.sharding.AxisType`` — the Auto/Explicit/Manual axis-type enum,
+* ``AbstractMesh(axis_sizes, axis_names, axis_types=...)`` — the
+  two-sequence constructor,
+* ``jax.make_mesh(..., axis_types=...)`` — the axis-types keyword,
+* ``jax.shard_map(..., axis_names=...)`` — top-level shard_map whose
+  ``axis_names`` picks the manual axes.
+
+Older jax (0.4.x, the baked-in toolchain on some containers) predates all
+three: there is no public ``AxisType``, ``AbstractMesh`` takes a single
+``shape_tuple`` of ``(name, size)`` pairs, and ``make_mesh`` rejects
+``axis_types``. ``install()`` patches the gap *in the old-jax direction
+only* — on a modern jax it is a no-op — so the same source runs on both.
+Importing this module installs the shims; ``from repro.compat import
+AxisType`` is the canonical spelling inside the repo.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding as _sharding
+
+try:  # jax >= 0.5: the real enum exists — everything below is a no-op.
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _NEEDS_SHIM = False
+except ImportError:
+    _NEEDS_SHIM = True
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` (accepted and ignored —
+        old jax has no user-visible axis-type machinery)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def _new_style_abstract_mesh(cls):
+    """Adapt new-signature calls onto the old single-argument constructor."""
+
+    @functools.wraps(cls, updated=())
+    def make(axis_sizes, axis_names=None, *, axis_types=None):
+        if axis_names is None:          # old-style: already a shape_tuple
+            return cls(axis_sizes)
+        return cls(tuple(zip(axis_names, axis_sizes)))
+
+    return make
+
+
+def _tolerant_make_mesh(fn):
+    @functools.wraps(fn)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        return fn(axis_shapes, axis_names, **kw)
+
+    return make_mesh
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      **kw):
+    """``jax.shard_map(..., axis_names={...})`` on top of the experimental
+    shard_map, whose equivalent knob is the complement set ``auto``. The
+    old static replication checker rejects psum/pmean patterns the modern
+    one accepts, so it is off by default (semantics are unchanged; the
+    equivalence tests in tests/test_distributed.py are the real check)."""
+    from jax.experimental.shard_map import shard_map as _sm
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    kw.setdefault("check_rep", False)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def install() -> None:
+    """Idempotently install the shims into ``jax`` / ``jax.sharding``.
+    The two probes are independent: mid-vintage jax has ``AxisType`` but
+    not yet the top-level ``jax.shard_map`` alias."""
+    if _NEEDS_SHIM and getattr(_sharding, "AxisType", None) is not AxisType:
+        _sharding.AxisType = AxisType
+        _sharding.AbstractMesh = _new_style_abstract_mesh(
+            _sharding.AbstractMesh)
+        jax.make_mesh = _tolerant_make_mesh(jax.make_mesh)
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+
+
+install()

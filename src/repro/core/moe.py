@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro import compat as _compat  # installs jax.shard_map on old jax
+
 from .router import RouterOut, route
 
 

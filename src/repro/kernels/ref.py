@@ -77,3 +77,40 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkh->bqh", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def slot_decode_attention_ref(q, k_cache, v_cache, positions, *,
+                              ring: bool = False) -> jax.Array:
+    """Single-token cached GQA attention with *per-row* positions — the
+    serve engine's decode hot path (one jitted step over a churning
+    continuous batch; repro/serve/engine.py).
+
+    q: (B, nh, hd) current-token queries (post-RoPE, unscaled);
+    k_cache/v_cache: (B, S, nkv, hd) slot-row caches; positions: (B,) int32
+    absolute position of the current token per row. ``ring=True`` treats the
+    cache as a sliding-window ring buffer where absolute position p lives at
+    slot ``p % S`` (so slot s currently holds the largest p <= positions[b]
+    with p % S == s); otherwise slot s holds absolute position s. Cache
+    entries beyond a row's position (or outside its window) are masked.
+    Returns (B, nh, hd) in fp32-accumulated, q-dtype output.
+    """
+    import math as _m
+    B, nh, hd = q.shape
+    S, nkv = k_cache.shape[1], k_cache.shape[2]
+    groups = nh // nkv
+    idx = positions.astype(jnp.int32)
+    slots = jnp.arange(S)[None, :]                       # (1, S)
+    if ring:
+        sl = (idx % S)[:, None]
+        wrap = jnp.where(slots <= sl, slots, slots - S)
+        abs_pos = idx[:, None] - sl + wrap
+    else:
+        abs_pos = jnp.broadcast_to(slots, (B, S))
+    valid = (abs_pos >= 0) & (abs_pos <= idx[:, None])   # (B, S)
+
+    qf = q.reshape(B, nkv, groups, hd).astype(jnp.float32) / _m.sqrt(hd)
+    s = jnp.einsum("bngh,bsnh->bngs", qf, k_cache.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnh->bngh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, nh, hd).astype(q.dtype)

@@ -5,7 +5,8 @@ touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType  # installs old-jax shims on import
 
 
 def make_production_mesh(*, multi_pod: bool = False):

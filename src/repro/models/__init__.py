@@ -1,2 +1,2 @@
 from .model import (init_params, forward, loss_fn, init_cache, decode_step,
-                    padded_vocab)
+                    prefill_with_cache, padded_vocab)

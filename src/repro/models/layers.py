@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.kernels.ref import slot_decode_attention_ref
+
 Constrain = Callable[[jax.Array, str], jax.Array]  # (x, logical_spec_name)
 
 # Probe mode (launch/costmodel.py): forces single-block attention so the
@@ -221,46 +223,35 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
 
 def decode_attention(params, x, cache, index, cfg,
                      *, constrain: Constrain = no_constrain):
-    """One-token decode. x: (B, 1, d); index: scalar absolute position.
+    """One-token decode. x: (B, 1, d); index: scalar absolute position, or a
+    (B,) int32 vector of per-row positions (continuous batching: every cache
+    row advances independently; see repro/serve/engine.py).
 
     Returns (out (B,1,d), new_cache). Sliding-window caches are ring buffers
-    indexed by ``index % window``.
+    indexed by ``position % window`` per row. Writes whose position falls
+    outside a full cache are dropped (the row's slot budget is exhausted).
     """
     B, _, d = x.shape
     nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
     q = (x @ params["wq"].astype(x.dtype)).reshape(B, 1, nh, hd)
     k = (x @ params["wk"].astype(x.dtype)).reshape(B, 1, nkv, hd)
     v = (x @ params["wv"].astype(x.dtype)).reshape(B, 1, nkv, hd)
-    pos = jnp.full((B, 1), index, jnp.int32)
+    pos = idx[:, None]
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
 
     size = cache["k"].shape[1]
-    slot = index % size if cfg.sliding_window > 0 else index
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    ring = cfg.sliding_window > 0
+    slot = idx % size if ring else idx
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype),
+                                       mode="drop")
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype),
+                                       mode="drop")
     new_cache = {"k": ck, "v": cv}
 
-    # positions of cache slots (for masking invalid/ring slots)
-    slots = jnp.arange(size)
-    if cfg.sliding_window > 0:
-        # ring: slot s holds absolute position p where p % size == s and
-        # p in (index - size, index]
-        wrap = jnp.where(slots <= slot, slots, slots - size)
-        abs_pos = index - slot + wrap
-    else:
-        abs_pos = slots
-    valid = (abs_pos >= 0) & (abs_pos <= index)
-
-    groups = nh // nkv
-    qf = q.reshape(B, nkv, groups, hd).astype(jnp.float32) / math.sqrt(hd)
-    kf = ck.astype(jnp.float32)
-    s = jnp.einsum("bngh,bsnh->bngs", qf, kf)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bngs,bsnh->bngh", p, cv.astype(jnp.float32))
+    o = slot_decode_attention_ref(q[:, 0], ck, cv, idx, ring=ring)
     o = o.reshape(B, 1, nh * hd).astype(x.dtype)
     out = o @ params["wo"].astype(x.dtype)
     return constrain(out, "act_btd"), new_cache

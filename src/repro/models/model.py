@@ -374,7 +374,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params, tokens, cache: dict, index, cfg: ModelConfig, *,
                 rules=None, compute_dtype=jnp.bfloat16):
-    """One decode step. tokens: (B, 1) int32; index: scalar position.
+    """One decode step. tokens: (B, 1) int32; index: scalar position, or a
+    (B,) int32 vector of per-row positions (continuous batching — each cache
+    row advances independently; see repro/serve/engine.py).
     Returns (logits (B, 1, V_pad), new_cache)."""
     cons = rules.constrain if rules else (lambda x, n: x)
     at = cfg.arch_type
@@ -480,3 +482,76 @@ def decode_step(params, tokens, cache: dict, index, cfg: ModelConfig, *,
     head = params.get("head", params["embed"])
     logits = L.unembed(head, h)
     return cons(logits, "logits"), new_cache
+
+
+# ----------------------------------------------------------------------------
+# prefill into cache slots (serve admission path)
+# ----------------------------------------------------------------------------
+
+def prefill_with_cache(params, tokens, cache: dict, slots, lengths,
+                       cfg: ModelConfig, *, rules=None, mesh=None,
+                       compute_dtype=jnp.bfloat16):
+    """Prefill right-padded prompts directly into KV-cache rows.
+
+    tokens: (B', P) int32, right-padded; slots: (B',) int32 cache rows to
+    fill; lengths: (B',) valid prompt lengths (1 <= length <= P). Causal
+    masking keeps padded columns from contaminating real positions, and the
+    K/V of padded (or window-expired) positions are dropped by the scatter.
+    Ring (sliding-window) caches keep only the last ``window`` positions,
+    laid out at ``position % window`` — exactly the layout ``decode_step``
+    expects to find.
+
+    Returns (last_logits (B', V_pad) — the logits at position length-1 of
+    each row, i.e. the distribution of the first generated token — and the
+    updated cache). Attention-KV archs only (dense, moe); recurrent-state
+    archs prefill by stepping ``decode_step`` over the prompt instead.
+    """
+    at = cfg.arch_type
+    if at not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"prefill_with_cache supports attention-KV archs, not {at!r}")
+    cons = rules.constrain if rules else (lambda x, n: x)
+    h = L.embed(params["embed"], tokens, compute_dtype)
+    h = cons(h, "act_btd")
+
+    def step(carry, lp):
+        hh = carry
+        a, kv = L.attention(lp["attn"], L.apply_norm(lp["ln1"], hh, cfg.norm),
+                            cfg, constrain=cons, return_kv=True)
+        hh = hh + a
+        x2 = L.apply_norm(lp["ln2"], hh, cfg.norm)
+        if at == "moe":
+            # single-host capacity path, matching decode_step; ``mesh`` is
+            # accepted for signature parity but EP dispatch is not wired
+            # into serving yet (multi-host serve is a ROADMAP item)
+            mo, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg, mesh=None)
+            hh = hh + mo
+        else:
+            hh = hh + L.apply_mlp(lp["mlp"], x2, cfg.mlp_activation, cons)
+        return hh, kv
+
+    h, (ks, vs) = jax.lax.scan(step, h, params["layers"])  # (L, B', P, ...)
+
+    ck, cv = cache["kv"]["k"], cache["kv"]["v"]            # (L, B, W, n, hd)
+    W = ck.shape[2]
+    P = tokens.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    pos = jnp.arange(P)[None, :]                           # (1, P)
+    keep = (pos < lengths[:, None]) & (pos >= lengths[:, None] - W)
+    if cfg.sliding_window > 0:
+        dest = jnp.where(keep, pos % W, W)                 # W => dropped
+    else:
+        dest = jnp.where(keep & (pos < W), pos, W)
+    rows = jnp.broadcast_to(slots[:, None], dest.shape)
+    new_cache = dict(cache)
+    new_cache["kv"] = {
+        "k": ck.at[:, rows, dest].set(ks.astype(ck.dtype), mode="drop"),
+        "v": cv.at[:, rows, dest].set(vs.astype(cv.dtype), mode="drop"),
+    }
+
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    head = params.get("head", params["embed"])
+    logits = cons(L.unembed(head, h), "logits")            # (B', P, V_pad)
+    last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)
+    return last[:, 0], new_cache

@@ -1,0 +1,280 @@
+"""Continuous-batching serve engine.
+
+One ``ServeEngine`` owns a model's params, a ``SlotKVPool`` and a
+``FIFOScheduler``, and advances the whole request population one token per
+``step()``:
+
+  admit    scheduler pass (FIFO + prefill-priority, token-budgeted) claims a
+           free cache slot per admitted request;
+  prefill  the prompt is run through ``models.prefill_with_cache``, K/V land
+           directly in the claimed slot and the *first* generated token is
+           sampled from the last-position logits — the request joins the
+           very next decode step;
+  decode   ONE jitted ``decode_step`` over the full slot batch with a (B,)
+           per-slot position vector — shapes never change, so the step
+           compiles exactly once no matter how requests churn;
+  evict    EOS / max-token rows free their slot for the next admission pass.
+
+Host/device split: request bookkeeping (positions, generated tokens, free
+slots) is host-side python; only the cache pytree and the per-step token
+batch live on device. Steady-state decode costs one device sync per step
+(the ``np.asarray(next_tokens)`` after decode); each admitted request adds
+one more for its prefill's first token.
+
+``make_decode_fn`` / ``make_prefill_fn`` are the engine's two lowerings and
+are also what ``train.trainer.make_serve_step`` / ``make_prefill_step``
+build on — the dry-run's decode_32k / long_500k shapes and the engine share
+one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill_with_cache
+from .kv_pool import SlotKVPool
+from .sampling import SamplingParams, position_keys, sample_tokens
+from .scheduler import FIFOScheduler, Request
+
+
+def dropless_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Serving must be batching-transparent: with a capacity-limited MoE
+    (cf < E/K), whether a token's expert contribution is dropped depends on
+    which other rows share the batch — a request's output would change with
+    batch composition. Raise the capacity factor to the dropless bound for
+    the serve lowerings (decode batches are small; the extra pool rows are
+    noise next to the KV cache)."""
+    if not cfg.is_moe:
+        return cfg
+    m = cfg.moe
+    need = m.num_experts / max(m.experts_per_token, 1)
+    if m.capacity_factor >= need:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(m, capacity_factor=float(need)))
+
+
+def make_decode_fn(cfg: ModelConfig, *, rules=None,
+                   compute_dtype=jnp.float32):
+    """Build the engine's decode lowering: one token for every slot, sampled
+    with per-slot params. All arguments are (B,)-shaped except tokens (B, 1)
+    — jit once, reuse forever."""
+    cfg = dropless_cfg(cfg)
+    vocab = cfg.vocab_size
+
+    def decode_fn(params, tokens, cache, positions, seeds,
+                  temperature, top_k, top_p):
+        logits, cache = decode_step(params, tokens, cache, positions, cfg,
+                                    rules=rules, compute_dtype=compute_dtype)
+        keys = position_keys(seeds, positions)
+        nxt = sample_tokens(logits[:, 0, :vocab], keys, temperature,
+                            top_k, top_p)
+        return nxt, cache
+
+    return decode_fn
+
+
+def make_prefill_fn(cfg: ModelConfig, *, rules=None, mesh=None,
+                    compute_dtype=jnp.float32):
+    """Build the engine's prefill lowering: write prompt K/V into cache rows
+    and sample the first generated token from the last-position logits
+    (keyed on position length-1, so single-request replay matches)."""
+    cfg = dropless_cfg(cfg)
+    vocab = cfg.vocab_size
+
+    def prefill_fn(params, tokens, cache, slots, lengths, seeds,
+                   temperature, top_k, top_p):
+        last, cache = prefill_with_cache(params, tokens, cache, slots,
+                                         lengths, cfg, rules=rules, mesh=mesh,
+                                         compute_dtype=compute_dtype)
+        keys = position_keys(seeds, lengths - 1)
+        first = sample_tokens(last[:, :vocab], keys, temperature,
+                              top_k, top_p)
+        return first, cache
+
+    return prefill_fn
+
+
+@dataclass
+class GenResult:
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    finish_reason: str                   # 'eos' | 'length'
+    arrival_time: float = 0.0
+    token_times: list[float] = field(default_factory=list)
+
+
+@dataclass
+class _SlotState:
+    req: Request
+    slot: int
+    pos: int                             # position the next token is fed at
+    tokens: list[int] = field(default_factory=list)
+    token_times: list[float] = field(default_factory=list)
+
+
+def _bucket(n: int, floor: int) -> int:
+    """Next power of two >= max(n, floor) — prefill retraces per bucket, not
+    per prompt length."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """See module docstring. ``num_slots`` bounds concurrent requests;
+    ``max_len`` sizes full caches (ring configs are O(window) regardless).
+    ``eos_id=None`` disables EOS termination (smoke models emit arbitrary
+    ids)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 scheduler: Optional[FIFOScheduler] = None,
+                 cache_dtype=jnp.float32, compute_dtype=jnp.float32,
+                 rules=None, mesh=None, prefill_bucket: int = 8,
+                 decode_fn=None, prefill_fn=None):
+        if cfg.arch_type not in ("dense", "moe"):
+            raise NotImplementedError(
+                "ServeEngine drives attention-KV archs (dense, moe); "
+                f"got {cfg.arch_type!r}")
+        self.params = params
+        self.cfg = cfg
+        self.eos_id = eos_id
+        self.pool = SlotKVPool(cfg, num_slots, max_len, cache_dtype)
+        self.scheduler = scheduler or FIFOScheduler()
+        self.prefill_bucket = prefill_bucket
+        # decode_fn/prefill_fn: already-jitted lowerings to share a compile
+        # cache across engines (benchmarks spin up several engines over the
+        # same config — recompiling per engine would swamp the clock)
+        self._decode = decode_fn or jax.jit(
+            make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype))
+        self._prefill = prefill_fn or jax.jit(
+            make_prefill_fn(cfg, rules=rules, mesh=mesh,
+                            compute_dtype=compute_dtype))
+        self._slots: dict[int, _SlotState] = {}
+        self._results: dict[int, GenResult] = {}
+        self._next_rid = 0
+        self.steps = 0
+        self.tokens_generated = 0
+
+    # ---- request intake -----------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
+               sampling: SamplingParams = SamplingParams(),
+               arrival_time: float = 0.0) -> int:
+        if len(prompt) == 0:
+            raise ValueError("empty prompt: the first token is sampled from "
+                             "the last prompt position, so one is required")
+        if self.cfg.sliding_window <= 0 and \
+                len(prompt) + max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"prompt+generation ({len(prompt)}+{max_new_tokens}) "
+                f"exceeds cache max_len {self.pool.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.scheduler.submit(Request(rid, list(prompt), max_new_tokens,
+                                      sampling, arrival_time))
+        return rid
+
+    # ---- one engine step ----------------------------------------------------
+    def step(self, now: Optional[float] = None) -> list[GenResult]:
+        """Admit + prefill newcomers, then decode one token for every
+        in-flight request. Returns the requests that finished this step."""
+        finished: list[GenResult] = []
+
+        # admissions prefill one request per call (B'=1): batching them
+        # would retrace the jitted prefill per (bucket, group-size) pair,
+        # which costs more than the k-1 dispatches it saves
+        for req in self.scheduler.pop_admissible(self.pool.num_free, now):
+            slot = self.pool.alloc()
+            L = req.prompt_len
+            P = _bucket(L, self.prefill_bucket)
+            toks = np.zeros((1, P), np.int32)
+            toks[0, :L] = req.prompt
+            sp = req.sampling
+            first, self.pool.cache = self._prefill(
+                self.params, jnp.asarray(toks), self.pool.cache,
+                jnp.asarray([slot], jnp.int32), jnp.asarray([L], jnp.int32),
+                jnp.asarray([sp.seed], jnp.int32),
+                jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.top_p], jnp.float32))
+            st = _SlotState(req=req, slot=slot, pos=L)
+            self._slots[slot] = st
+            self._emit(st, int(first[0]), finished)
+
+        if self._slots:
+            B = self.pool.num_slots
+            tokens = np.zeros((B, 1), np.int32)
+            positions = np.zeros((B,), np.int32)
+            seeds = np.zeros((B,), np.int32)
+            temperature = np.zeros((B,), np.float32)
+            top_k = np.zeros((B,), np.int32)
+            top_p = np.ones((B,), np.float32)
+            for slot, st in self._slots.items():
+                sp = st.req.sampling
+                tokens[slot, 0] = st.tokens[-1]
+                positions[slot] = st.pos
+                seeds[slot] = sp.seed
+                temperature[slot] = sp.temperature
+                top_k[slot] = sp.top_k
+                top_p[slot] = sp.top_p
+            nxt, self.pool.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.pool.cache,
+                jnp.asarray(positions), jnp.asarray(seeds),
+                jnp.asarray(temperature), jnp.asarray(top_k),
+                jnp.asarray(top_p))
+            nxt = np.asarray(nxt)                    # the one device sync
+            for slot, st in list(self._slots.items()):
+                st.pos += 1
+                self._emit(st, int(nxt[slot]), finished)
+
+        self.steps += 1
+        return finished
+
+    def _emit(self, st: _SlotState, token: int,
+              finished: list[GenResult]) -> None:
+        """Append one generated token; finish/evict on EOS or length."""
+        if self.eos_id is not None and token == self.eos_id:
+            self._finish(st, "eos", finished)
+            return
+        st.tokens.append(token)
+        st.token_times.append(time.perf_counter())
+        self.tokens_generated += 1
+        if len(st.tokens) >= st.req.max_new_tokens:
+            self._finish(st, "length", finished)
+
+    def _finish(self, st: _SlotState, reason: str,
+                finished: list[GenResult]) -> None:
+        res = GenResult(st.req.rid, st.req.prompt_len, st.tokens, reason,
+                        arrival_time=st.req.arrival_time,
+                        token_times=st.token_times)
+        self._results[st.req.rid] = res
+        finished.append(res)
+        del self._slots[st.slot]
+        self.pool.free(st.slot)
+
+    # ---- drive to completion -------------------------------------------------
+    @property
+    def active(self) -> int:
+        return len(self._slots)
+
+    @property
+    def results(self) -> dict[int, GenResult]:
+        """Finished requests so far, keyed by rid."""
+        return self._results
+
+    def run(self) -> dict[int, GenResult]:
+        """Step until the queue and all slots drain (ignores arrival times —
+        trace replay drives ``step(now=...)`` itself, see bench_serve.py)."""
+        while len(self.scheduler) or self._slots:
+            self.step()
+        return self._results

@@ -1,0 +1,76 @@
+"""Slot-indexed KV/SSM cache pool for continuous batching.
+
+One device-resident cache pytree (built by ``models.init_cache``) whose
+batch axis is reinterpreted as *slots*: every leaf is (L, num_slots, ...)
+with the slot axis at position 1, so a single jitted ``decode_step`` over
+the full slot batch serves a churning request population without
+recompilation — requests come and go, the arrays never change shape.
+
+Slot bookkeeping (free list) lives on the host; slot *contents* need no
+eager cleanup because the decode path masks cache entries by the per-slot
+position vector (a freed slot's stale K/V is unreachable from any validity
+mask — tests/test_serve.py::test_slot_reuse_no_leakage). ``reset_slot`` is
+still provided as a debugging / hygiene aid. Sliding-window configs get
+O(window) ring-buffer slots instead of O(max_len) rows — the long_500k
+lowering.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+
+
+class SlotKVPool:
+    """Fixed-capacity pool of cache slots over ``models.init_cache``."""
+
+    def __init__(self, cfg, num_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        if cfg.arch_type == "audio":
+            raise NotImplementedError(
+                "audio caches carry a (B, S, d) encoder memory leaf; the "
+                "slot pool assumes a leading (layer, slot) layout")
+        if 0 < max_len < cfg.sliding_window:
+            # a ring smaller than the model's window silently narrows
+            # attention from the second decode token onward (prefill attends
+            # with the full window; the truncated ring can't store it)
+            raise ValueError(
+                f"max_len {max_len} < sliding_window {cfg.sliding_window}: "
+                "ring slots must hold the model's full attention window")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, num_slots, max_len, dtype)
+        self._free = deque(range(num_slots))
+
+    # ---- host-side bookkeeping ---------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot (lowest-index first, keeping reuse patterns
+        deterministic for tests). Raises when the pool is exhausted —
+        admission control must check ``num_free`` first."""
+        if not self._free:
+            raise RuntimeError("KV pool exhausted: no free slots")
+        return self._free.popleft()
+
+    def free(self, slot: int) -> None:
+        if slot in self._free or not 0 <= slot < self.num_slots:
+            raise ValueError(f"bad free of slot {slot}")
+        self._free.appendleft(slot)
+
+    # ---- device-side content -----------------------------------------------
+    def reset_slot(self, slot: int) -> None:
+        """Zero one slot row in every leaf (not required for correctness —
+        see module docstring — but useful when hunting leakage)."""
+        self.cache = jax.tree.map(lambda a: a.at[:, slot].set(0), self.cache)
+
+    def slot_bytes(self) -> int:
+        """Per-slot cache footprint (capacity planning / admission knobs)."""
+        return sum(a.nbytes // self.num_slots
+                   for a in jax.tree.leaves(self.cache))

@@ -1,0 +1,70 @@
+"""Per-request token sampling for the serve engine.
+
+Every request carries its own ``SamplingParams``; the engine packs them into
+per-slot arrays so one jitted ``sample_tokens`` serves a batch that mixes
+greedy, temperature, top-k and nucleus requests without recompilation.
+
+Determinism contract (tested in tests/test_serve.py): the token sampled for
+request *r* at absolute position *p* depends only on (r.seed, p) and the
+logits — never on which slot the request occupies or who else is in the
+batch. The engine derives the per-slot key as
+``fold_in(PRNGKey(seed), position)``, so evicting and readmitting a request
+(or replaying it alone) reproduces the same tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request knobs. ``temperature <= 0`` means greedy argmax (top-k /
+    top-p are then irrelevant); ``top_k == 0`` disables top-k; ``top_p >= 1``
+    disables nucleus filtering."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+def position_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
+    """(B,) seeds x (B,) positions -> (B, 2) uint32 PRNG keys, one per slot."""
+    return jax.vmap(lambda s, p: jax.random.fold_in(
+        jax.random.PRNGKey(s), p))(seeds, positions)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Sample one token per row with *per-row* parameters.
+
+    logits: (B, V) — already sliced to the real vocab (no padding columns);
+    keys: (B, 2) uint32; temperature/top_k/top_p: (B,). Rows with
+    ``temperature <= 0`` take the argmax. Returns (B,) int32.
+
+    top-k masks everything below the k-th logit; top-p keeps the smallest
+    prefix of the (temperature-scaled, top-k-filtered) distribution whose
+    mass reaches p — always at least the most likely token.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    order = jnp.argsort(-scaled, axis=-1)                  # descending
+    ranks = jnp.argsort(order, axis=-1)                    # rank per column
+    k = jnp.where(top_k > 0, top_k, V)[:, None]
+    kept = jnp.where(ranks < k, scaled, -jnp.inf)
+
+    sorted_kept = jnp.take_along_axis(kept, order, axis=-1)
+    probs = jax.nn.softmax(sorted_kept, axis=-1)
+    cdf_before = jnp.cumsum(probs, axis=-1) - probs        # exclusive cumsum
+    keep_sorted = cdf_before < top_p[:, None]              # >= 1 column kept
+    keep = jnp.zeros_like(keep_sorted).at[
+        jnp.arange(B)[:, None], order].set(keep_sorted)
+    final = jnp.where(keep, kept, -jnp.inf)
+
+    sampled = jax.vmap(jax.random.categorical)(keys, final)
+    return jnp.where(temperature <= 0, greedy, sampled).astype(jnp.int32)

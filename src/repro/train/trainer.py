@@ -7,8 +7,11 @@ clipping enabled only after warmup, gradient accumulation over microbatches
 via ``lax.scan``, SAC remat policies.
 
 ``serve_step`` is single-token decode against a KV/SSM cache (the lowering
-target for decode_32k / long_500k); ``prefill_step`` is the forward pass for
-prefill_32k.
+target for decode_32k / long_500k) — with ``sample=True`` it becomes the
+serve engine's decode lowering (per-slot positions + per-request sampling;
+repro/serve/engine.py). ``prefill_step`` is the forward pass for prefill_32k;
+with ``into_cache=True`` it writes prompt K/V straight into cache slots (the
+engine's admission path).
 """
 from __future__ import annotations
 
@@ -19,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
-from repro.models import init_params, loss_fn, forward, init_cache, decode_step
+from repro.models import (init_params, loss_fn, forward, init_cache,
+                          decode_step, prefill_with_cache)
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
 
 
@@ -98,7 +102,23 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
 
 
 def make_prefill_step(cfg: ModelConfig, *, rules=None, mesh=None,
-                      compute_dtype=jnp.bfloat16):
+                      compute_dtype=jnp.bfloat16, into_cache: bool = False):
+    """``into_cache=False``: the prefill_32k lowering — forward over the
+    batch, last-position logits. ``into_cache=True``: the serve engine's
+    admission lowering — ``prefill_step(params, tokens, cache, slots,
+    lengths)`` writes the prompts' K/V into the given cache slots and
+    returns (last_logits, new_cache); see models.prefill_with_cache."""
+    if into_cache:
+        from repro.serve.engine import dropless_cfg
+        scfg = dropless_cfg(cfg)   # serving must be batching-transparent
+
+        def prefill_step(params, tokens, cache, slots, lengths):
+            return prefill_with_cache(params, tokens, cache, slots, lengths,
+                                      scfg, rules=rules, mesh=mesh,
+                                      compute_dtype=compute_dtype)
+
+        return prefill_step
+
     def prefill_step(params, batch):
         logits, _ = forward(params, batch, cfg, rules=rules, mesh=mesh,
                             sac="", compute_dtype=compute_dtype)
@@ -108,7 +128,16 @@ def make_prefill_step(cfg: ModelConfig, *, rules=None, mesh=None,
 
 
 def make_serve_step(cfg: ModelConfig, *, rules=None,
-                    compute_dtype=jnp.bfloat16):
+                    compute_dtype=jnp.bfloat16, sample: bool = False):
+    """``index`` may be a scalar (lockstep batch, the decode_32k shape) or a
+    (B,) vector of per-slot positions (continuous batching). With
+    ``sample=True`` returns the serve engine's full decode lowering —
+    ``(params, tokens, cache, positions, seeds, temperature, top_k, top_p)
+    -> (next_tokens, new_cache)`` — built by serve.make_decode_fn."""
+    if sample:
+        from repro.serve.engine import make_decode_fn
+        return make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype)
+
     def serve_step(params, tokens, cache, index):
         return decode_step(params, tokens, cache, index, cfg, rules=rules,
                            compute_dtype=compute_dtype)

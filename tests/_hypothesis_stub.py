@@ -1,0 +1,123 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+Not a property-testing engine — no shrinking, no example database. It
+re-implements just the surface the test suite uses (``given``, ``settings``,
+``assume``, and a handful of ``strategies``) as a seeded example sampler:
+each ``@given`` test runs its boundary cases (all-min, all-max) first, then
+random draws from a PRNG seeded by the test's qualname, up to
+``max_examples``. conftest.py registers this module under the ``hypothesis``
+name only when the real package is missing, so an environment that has
+hypothesis gets the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class _Strategy:
+    """A draw function plus optional (min, max) boundary examples."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return _Strategy(lambda r: fn(self._draw(r)),
+                         boundary=tuple(fn(b) for b in self.boundary))
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)), boundary=(False, True))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements),
+                     boundary=(elements[0], elements[-1]))
+
+
+def _lists(elem: _Strategy, *, min_size=0, max_size=10) -> _Strategy:
+    def draw(r):
+        return [elem.example(r) for _ in range(r.randint(min_size, max_size))]
+
+    return _Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator-factory form only (``@settings(...)`` above ``@given``)."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Map strategies onto the test's rightmost parameters (hypothesis
+    semantics); earlier parameters stay visible to pytest as fixtures."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(**kwargs):
+            max_ex = getattr(wrapper, "_stub_max_examples",
+                             DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            cases = []
+            if all(s.boundary for s in strats):
+                cases.append(tuple(s.boundary[0] for s in strats))
+                cases.append(tuple(s.boundary[-1] for s in strats))
+            while len(cases) < max_ex:
+                cases.append(tuple(s.example(rnd) for s in strats))
+            for case in cases[:max_ex]:
+                try:
+                    fn(**kwargs, **dict(zip(names, case)))
+                except UnsatisfiedAssumption:
+                    continue
+
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        return wrapper
+
+    return deco

@@ -28,7 +28,8 @@ def test_fsmoe_ep_matches_naive_with_grads():
     all-to-all."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType
         from repro.configs.base import ModelConfig, MoEConfig
         from repro.core import moe as M
         mesh = jax.make_mesh((2, 4), ("data", "model"),
@@ -70,7 +71,8 @@ def test_fsmoe_a2a_dispatch_matches_naive():
     the naive reference in the dropless regime."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType
         from repro.configs.base import ModelConfig, MoEConfig
         from repro.core import moe as M
         mesh = jax.make_mesh((2, 4), ("data", "model"),
@@ -109,7 +111,8 @@ def test_moe_etp_shard_map_matches_naive():
     over the model axis; exact vs the naive reference."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType
         from repro.configs.base import ModelConfig, MoEConfig
         from repro.core import moe as M
         mesh = jax.make_mesh((2, 4), ("data", "model"),
@@ -147,7 +150,8 @@ def test_sharded_train_step_matches_single_device():
     """pjit train_step on a (2,4) mesh == single-device train_step."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import AxisType
         from repro.configs import get_config, reduced, TrainConfig, ParallelConfig
         from repro.train import init_state, make_train_step
         from repro.parallel.sharding import make_rules, shardings
@@ -194,7 +198,7 @@ def test_epso_state_placement_on_devices():
     """EPSO states occupy fewer bytes per device than SO on a real mesh."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType
         from repro.configs import get_config, reduced
         from repro.models import init_params
         from repro.optim import adamw_init
