@@ -1,20 +1,36 @@
 """Paper Table 3, EPSO column + Figure 6: SO vs EPSO.
 
-Reports, per MoE model (paper's Mula family + assigned MoE archs) on the
-16x16 production mesh:
-  * per-device optimizer-state bytes (master+m+v fp32) under SO and EPSO —
-    the memory mechanism of Figure 6;
-  * the update-step roofline: optimizer FLOPs and HBM traffic scale with the
-    local state shard, so bytes_ratio is the paper's optimizer-step speedup
-    mechanism (the paper measures 1.07-1.36x wall-clock on PVC);
-  * CPU walltime of one sharded update at reduced scale (SO vs EPSO state
-    placement on a host mesh) as a directional measurement.
+Two parts:
+
+* spec-level (``run(report)``, used by benchmarks/run.py): per MoE model on
+  the 16x16 production AbstractMesh, analytic per-device optimizer-state
+  bytes (master+m+v fp32) under SO and EPSO — the memory mechanism of
+  Figure 6 and, via the update-step roofline, the paper's optimizer-step
+  speedup mechanism (1.07-1.36x wall-clock on PVC);
+
+* measured (``python benchmarks/bench_epso.py``): a subprocess with 8 forced
+  CPU host devices trains a reduced Mula-7B-A1B on a (4,2) (data, model)
+  mesh under ``opt_shard`` in {none, so, epso}, recording *placed* per-device
+  optimizer-state bytes (summed over the shards resident on device 0) and
+  the post-compile step time, into ``BENCH_epso.json`` at the repo root.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(ROOT, "src") not in sys.path:      # direct-script invocation
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
 import jax
 import numpy as np
-from jax.sharding import AbstractMesh, AxisType
+
+from repro.compat import AxisType  # installs old-jax shims on import
+from jax.sharding import AbstractMesh
 
 from repro.configs import get_config
 from repro.models import init_params
@@ -23,6 +39,8 @@ from repro.parallel.sharding import make_rules
 
 MODELS = ["mula-7b-a1b", "mula-20b-a2b", "mula-100b-a7b", "mula-220b-a10b",
           "dbrx-132b", "mixtral-8x7b", "moonshot-v1-16b-a3b"]
+
+MEASURE_MODES = ("none", "so", "epso")
 
 
 def run(report):
@@ -39,3 +57,101 @@ def run(report):
         report(f"epso_state_bytes_epso[{name}]", epso / 2**20,
                derived=f"bytes_ratio={so / epso:.2f}x "
                        f"(paper optimizer speedups: 1.07-1.36x)")
+
+
+# ---------------------------------------------------------------------------
+# measured: simulated 8-device mesh
+# ---------------------------------------------------------------------------
+
+def measure(mesh_spec: str = "4,2", steps: int = 5, d_model: int = 64,
+            seq: int = 32, batch: int = 8) -> dict:
+    """Runs inside a process whose backend sees enough devices."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.configs import ParallelConfig, TrainConfig, reduced
+    from repro.launch.mesh import make_sim_mesh
+    from repro.train import init_state, make_train_step
+
+    mesh = make_sim_mesh(mesh_spec)
+    cfg = reduced(get_config("mula-7b-a1b"), d_model=d_model)
+    tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                     grad_reduce_dtype="float32", lr_peak=1e-3, lr_min=1e-4,
+                     warmup_steps=2, total_steps=steps + 1, seq_len=seq,
+                     global_batch=batch)
+    rules = make_rules(cfg, mesh, kind="train", global_batch=batch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq + 1), 0,
+                              cfg.vocab_size)
+    b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    dev0 = jax.devices()[0]
+    out = {}
+    for mode in MEASURE_MODES:
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
+                           opt_sharding_mode=mode)
+        step_fn = make_train_step(cfg, ParallelConfig(), tc, rules=rules,
+                                  mesh=mesh, opt_sharding_mode=mode)
+        state, _ = step_fn(state, b)                    # compile + place
+        jax.block_until_ready(jax.tree.leaves(state.opt.m)[0])
+        placed = 0
+        for leaf in (jax.tree.leaves(state.opt.master)
+                     + jax.tree.leaves(state.opt.m)
+                     + jax.tree.leaves(state.opt.v)):
+            placed += sum(s.data.nbytes for s in leaf.addressable_shards
+                          if s.device == dev0)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step_fn(state, b)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / steps
+        out[mode] = {
+            "state_bytes_per_device": int(placed),
+            "state_bytes_per_device_analytic": int(
+                state_bytes_per_device(state.params, rules, mode)),
+            "step_time_ms": dt * 1e3,
+        }
+    return {"mesh": mesh_spec, "devices": len(jax.devices()),
+            "arch": cfg.name, "d_model": d_model, "seq": seq, "batch": batch,
+            "modes": out}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="4,2")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_epso.json"))
+    ap.add_argument("--_measure", action="store_true",
+                    help=argparse.SUPPRESS)   # child-process mode
+    args = ap.parse_args(argv)
+
+    if args._measure:
+        print(json.dumps(measure(args.mesh, steps=args.steps)))
+        return
+
+    from repro.launch.mesh import forced_device_env
+    shape = [int(x) for x in args.mesh.split(",")]
+    env = forced_device_env(int(np.prod(shape)))
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--_measure",
+         "--mesh", args.mesh, "--steps", str(args.steps)],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        sys.stderr.write(r.stdout + r.stderr)
+        raise SystemExit("bench_epso measured run failed")
+    result = json.loads(r.stdout.strip().splitlines()[-1])
+    modes = result["modes"]
+    assert modes["epso"]["state_bytes_per_device"] \
+        < modes["so"]["state_bytes_per_device"], modes
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for mode in MEASURE_MODES:
+        m = modes[mode]
+        print(f"{mode:5s} state_bytes/dev={m['state_bytes_per_device']:>10d} "
+              f"step={m['step_time_ms']:.1f}ms")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

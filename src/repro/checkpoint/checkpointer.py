@@ -91,11 +91,18 @@ def broadcast_params(params, mesh=None):
 # ---------------------------------------------------------------------------
 
 class Checkpointer:
+    """Dual + model-only checkpointing; mesh-sharded states are supported by
+    gather-on-save (``np.asarray`` on a single-process sharded jax.Array
+    assembles the global array) and reshard-on-restore (restored host arrays
+    are ``device_put`` back onto ``shardings``, so an SO/EPSO run resumes
+    with the exact placement it was jitted for)."""
+
     def __init__(self, root: str, *, interval: int = 1000,
-                 model_only_interval: int = 0):
+                 model_only_interval: int = 0, shardings=None):
         self.root = root
         self.interval = interval
         self.model_only_interval = model_only_interval or interval
+        self.shardings = shardings       # state-shaped pytree or None
         os.makedirs(root, exist_ok=True)
         self.slots = [os.path.join(root, "ckpt-1"),
                       os.path.join(root, "ckpt-2")]
@@ -139,9 +146,10 @@ class Checkpointer:
         os.rename(tmp, slot)
         return slot
 
-    def restore(self, template):
-        """Restore from the newest *valid* slot. Returns (state, step) or
-        (None, -1)."""
+    def restore(self, template, *, shardings=None):
+        """Restore from the newest *valid* slot, resharding each leaf onto
+        ``shardings`` (falling back to the instance default) when given.
+        Returns (state, step) or (None, -1)."""
         best, best_step = None, -1
         for slot in self.slots:
             s = self._slot_step(slot)
@@ -150,6 +158,9 @@ class Checkpointer:
         if best is None:
             return None, -1
         state = load_pytree(template, os.path.join(best, "state.npz"))
+        sh = shardings if shardings is not None else self.shardings
+        if sh is not None:
+            state = jax.tree.map(jax.device_put, state, sh)
         return state, best_step
 
     # ---- persistent model-only checkpoints --------------------------------

@@ -87,16 +87,18 @@ def run_with_failure_handling(train_one_step, *, state, checkpointer,
                               cluster: ClusterManager, num_steps: int,
                               monitor: Optional[NaNMonitor] = None,
                               max_relaunches: int = 8,
-                              on_relaunch=None):
+                              on_relaunch=None, start_step: int = 0):
     """Launcher loop: step -> checkpoint -> on failure swap node + restore.
 
     ``train_one_step(state, step) -> (state, metrics)`` may raise
     NodeFailure (hard) or return NaN metrics (soft, caught by the monitor).
+    ``start_step`` supports resuming a run already restored by the caller.
     Returns (state, step_reached, relaunches).
     """
     monitor = monitor or NaNMonitor()
-    relaunches = 0
-    step = 0
+    initial_state = state        # fallback when no valid checkpoint exists:
+    relaunches = 0               # restart must NOT keep partial updates, or
+    step = start_step            # replayed steps would be double-applied
     while step < num_steps:
         try:
             state, metrics = train_one_step(state, step)
@@ -116,7 +118,7 @@ def run_with_failure_handling(train_one_step, *, state, checkpointer,
             if restored is not None:
                 state, step = restored, ck_step + 1  # post-step checkpoint
             else:
-                step = 0
+                state, step = initial_state, start_step
             if on_relaunch is not None:
                 state = on_relaunch(state, f, step)
     return state, step, relaunches

@@ -22,3 +22,66 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     if shape is None:
         shape = (1, n)
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+# ---------------------------------------------------------------------------
+# simulated multi-device CPU meshes (the --mesh launcher path)
+# ---------------------------------------------------------------------------
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def parse_mesh_spec(spec):
+    """``'8'`` -> (data,), ``'4,2'`` -> (data, model), ``'2,2,2'`` ->
+    (pod, data, model). Returns (shape, axis_names)."""
+    dims = tuple(int(x) for x in str(spec).split(",") if x.strip())
+    if not 1 <= len(dims) <= 3 or any(d < 1 for d in dims):
+        raise ValueError(f"bad mesh spec {spec!r} (want e.g. '8', '4,2', "
+                         f"'2,2,2')")
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}[len(dims)]
+    return dims, axes
+
+
+def ensure_host_devices(n: int) -> None:
+    """Ask the CPU backend for ``n`` host devices by appending
+    ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS. Only effective
+    if the JAX backend has not initialized yet; respects a count the caller
+    already set. Call before the first jax.devices()/PRNGKey in the process.
+    """
+    import os
+    if n <= 1 or _FORCE_FLAG in os.environ.get("XLA_FLAGS", ""):
+        return
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FORCE_FLAG}={n}").strip()
+
+
+def forced_device_env(n: int, env=None) -> dict:
+    """Environment for a *child process* whose JAX backend should see ``n``
+    CPU host devices. Respects a force-count the caller already set (same
+    rule as ensure_host_devices). Used by the bench/test subprocess runners.
+    """
+    import os
+    env = dict(os.environ if env is None else env)
+    if _FORCE_FLAG not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" {_FORCE_FLAG}={n}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def make_sim_mesh(spec):
+    """Mesh from a CLI spec ('4,2') over forced CPU host devices. Raises with
+    the exact XLA_FLAGS fix if the backend came up with too few devices."""
+    shape, axes = parse_mesh_spec(spec)
+    n = 1
+    for d in shape:
+        n *= d
+    ensure_host_devices(n)
+    ndev = len(jax.devices())
+    if ndev < n:
+        raise RuntimeError(
+            f"mesh {spec} needs {n} devices but jax sees {ndev}; the backend "
+            f"initialized before the mesh request — launch with "
+            f"XLA_FLAGS='{_FORCE_FLAG}={n}' in the environment")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

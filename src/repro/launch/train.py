@@ -1,14 +1,23 @@
 """End-to-end training launcher.
 
 Wires together the full substrate: data pipeline (tokenize/shuffle/shard +
-mmap loader), model zoo, FSMOE, AdamW with SO/EPSO sharding, SAC, dual +
-model-only checkpointing, NaN monitoring, and (optionally) a host-device
-mesh. Reduced-scale runs reproduce the paper's Figure 1 training curves
-(see examples/train_mula.py).
+mmap loader), model zoo, FSMOE, AdamW with SO/EPSO state sharding jitted as
+``out_shardings``, SAC, dual + model-only checkpointing with reshard-on-
+restore, and the paper §4 failure-handling loop (NaN monitor + buffer-node
+ClusterManager) as the main loop. Reduced-scale runs reproduce the paper's
+Figure 1 training curves (see examples/train_mula.py).
 
-Usage:
+Usage (single device):
   PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
       --steps 100 --batch 8 --seq 128 --out runs/mula7b
+
+Usage (simulated 8-device mesh, EP-aware sharded optimizer, survives an
+injected hard node failure at step 12 via buffer-node swap + restore):
+  PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
+      --mesh 4,2 --opt-shard epso --steps 20 --inject-hard-at 12
+
+The ``--mesh R,C`` path forces R*C CPU host devices through XLA_FLAGS when
+the backend allows it (see launch/mesh.make_sim_mesh).
 """
 from __future__ import annotations
 
@@ -25,9 +34,19 @@ import numpy as np
 from repro.configs import (ParallelConfig, TrainConfig, get_config, reduced)
 from repro.data import ByteTokenizer, ShardedDataLoader, preprocess_corpus
 from repro.checkpoint import Checkpointer
-from repro.ft import NaNMonitor, NodeFailure
-from repro.train import init_state, make_train_step
+from repro.ft import (ClusterManager, NaNMonitor, NodeFailure,
+                      run_with_failure_handling)
+from repro.launch.mesh import make_sim_mesh
+from repro.parallel.sharding import batch_sharding, make_rules
+from repro.train import init_state, make_train_step, train_state_shardings
 from repro.models import padded_vocab
+
+
+class RunResult(list):
+    """History list (one dict per executed step, in step order) plus
+    fault-tolerance bookkeeping from the launcher loop."""
+    relaunches: int = 0
+    replaced: list = ()
 
 
 def synthetic_corpus(n_files: int = 4, docs_per_file: int = 64,
@@ -59,13 +78,28 @@ def prepare_data(out_dir: str, *, context: int, seed: int = 0,
     return data_dir
 
 
+def _env_int(name: str):
+    v = os.environ.get(name)
+    return int(v) if v else None
+
+
 def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         seq: int = 128, out: str = "runs/default", lr: float = 1e-3,
         moe_impl: str = None, fur: bool = False, ckpt_interval: int = 50,
         microbatches: int = 1, sac: str = "block", seed: int = 0,
         log_every: int = 10, d_model: int = 256, layers: int = 2,
-        d_ff: int = 0, moe_dff: int = 0):
+        d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
+        opt_shard: str = "none", n_buffer: int = 2,
+        inject_hard_at: int = None, inject_soft_at: int = None,
+        max_relaunches: int = 8) -> RunResult:
+    if opt_shard != "none" and not mesh:
+        raise ValueError(f"--opt-shard {opt_shard} needs --mesh: optimizer-"
+                         f"state sharding is a placement over mesh axes")
     os.makedirs(out, exist_ok=True)
+    # mesh first: make_sim_mesh must run before anything initializes the JAX
+    # backend, or the forced host-device count cannot take effect.
+    mesh_obj = make_sim_mesh(mesh) if mesh else None
+
     cfg = get_config(arch)
     if scale == "smoke":
         cfg = reduced(cfg, layers=layers, d_model=d_model,
@@ -90,12 +124,36 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                         seed=seed)
     par = ParallelConfig(microbatches=microbatches, remat_policy=sac)
 
-    state = init_state(jax.random.PRNGKey(seed), cfg, train)
-    step_fn = jax.jit(make_train_step(cfg, par, train))
-    ckpt = Checkpointer(os.path.join(out, "ckpt"), interval=ckpt_interval)
-    monitor = NaNMonitor()
+    rules = make_rules(cfg, mesh_obj, kind="train",
+                       global_batch=batch) if mesh_obj is not None else None
+    state = init_state(jax.random.PRNGKey(seed), cfg, train, rules=rules,
+                       opt_sharding_mode=opt_shard)
+    state_sh = train_state_shardings(state.params, rules, opt_shard)
+    if rules is not None:
+        step_fn = make_train_step(cfg, par, train, rules=rules, mesh=mesh_obj,
+                                  opt_sharding_mode=opt_shard,
+                                  state_shardings=state_sh)
+    else:
+        step_fn = jax.jit(make_train_step(cfg, par, train))
+    bsh = batch_sharding(rules)
 
-    # resume if a valid checkpoint exists
+    inject_hard_at = inject_hard_at if inject_hard_at is not None \
+        else _env_int("REPRO_INJECT_HARD_AT")
+    inject_soft_at = inject_soft_at if inject_soft_at is not None \
+        else _env_int("REPRO_INJECT_SOFT_AT")
+    # failure-injection demos checkpoint often enough that the injected
+    # failure has something newer than step 0 to restore; explicit intervals
+    # on ordinary runs are honored as-is
+    if (inject_hard_at is not None or inject_soft_at is not None) \
+            and ckpt_interval >= steps:
+        ckpt_interval = max(1, steps // 4)
+        print(f"injection requested: ckpt interval clamped to {ckpt_interval}")
+    ckpt = Checkpointer(os.path.join(out, "ckpt"), interval=ckpt_interval,
+                        shardings=state_sh)
+    n_nodes = max(2, len(jax.devices()))
+    cluster = ClusterManager(n_active=n_nodes, n_buffer=n_buffer)
+
+    # resume if a valid checkpoint exists (resharded onto the jitted placement)
     restored, ck_step = ckpt.restore(state)
     start = 0
     if restored is not None:
@@ -103,11 +161,19 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         print(f"resumed from step {start}")
 
     nparams = sum(l.size for l in jax.tree.leaves(state.params))
-    print(f"arch={cfg.name} params={nparams/1e6:.1f}M vocab={padded_vocab(cfg)}")
+    print(f"arch={cfg.name} params={nparams/1e6:.1f}M "
+          f"vocab={padded_vocab(cfg)} mesh={mesh or 'single'} "
+          f"opt_shard={opt_shard}")
 
-    history = []
+    injected = {"hard": False, "soft": False}
+    history = {}          # keyed by step: replays after restore overwrite
     t0 = time.time()
-    for step in range(start, steps):
+
+    def train_one_step(state, step):
+        if step == inject_hard_at and not injected["hard"]:
+            injected["hard"] = True
+            print(f"  !! injected HARD failure on node 0 @ step {step}")
+            raise NodeFailure(cluster.active[0].node_id, "hard")
         batch_np = loader.batch(step)
         if cfg.arch_type == "vlm":
             batch_np["image_embeds"] = np.zeros(
@@ -118,21 +184,46 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                             size=(batch, half, cfg.d_model)).astype(np.float32),
                         "tokens": batch_np["tokens"][:, :half],
                         "labels": batch_np["labels"][:, :half]}
-        state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
+        batch_dev = jax.tree.map(
+            lambda a: jax.device_put(a, bsh) if bsh is not None
+            else jnp.asarray(a), batch_np)
+        state, metrics = step_fn(state, batch_dev)
         loss = float(metrics["loss"])
-        monitor.check([loss], [float(metrics["grad_norm"])], step=step)
-        ckpt.maybe_save(state, state.params, step)
-        history.append({"step": step, "loss": loss,
-                        "lr": float(metrics["lr"]),
-                        "grad_norm": float(metrics["grad_norm"])})
+        gnorm = float(metrics["grad_norm"])
+        per_rank = [loss]
+        if step == inject_soft_at and not injected["soft"]:
+            injected["soft"] = True
+            print(f"  !! injected SOFT failure (NaN) on node 1 @ step {step}")
+            per_rank = [loss, float("nan")]
+        history[step] = {"step": step, "loss": loss,
+                         "lr": float(metrics["lr"]), "grad_norm": gnorm}
         if step % log_every == 0 or step == steps - 1:
             dt = time.time() - t0
-            print(f"step {step:5d} loss {loss:.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
+            print(f"step {step:5d} loss {loss:.4f} gnorm {gnorm:.3f} "
                   f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+        return state, {"loss": loss, "per_rank_losses": per_rank,
+                       "per_rank_grad_norms": [gnorm]}
+
+    state, end_step, relaunches = run_with_failure_handling(
+        train_one_step, state=state, checkpointer=ckpt, cluster=cluster,
+        num_steps=steps, monitor=NaNMonitor(), start_step=start,
+        max_relaunches=max_relaunches)
+
+    result = RunResult(history[s] for s in sorted(history))
+    result.relaunches = relaunches
+    result.replaced = list(cluster.replaced)
     with open(os.path.join(out, "history.json"), "w") as f:
-        json.dump(history, f)
-    return history
+        json.dump(list(result), f)
+    summary = {"arch": cfg.name, "steps": end_step, "mesh": mesh,
+               "opt_shard": opt_shard, "relaunches": relaunches,
+               "replaced": result.replaced,
+               "final_loss": result[-1]["loss"] if result else None}
+    with open(os.path.join(out, "summary.json"), "w") as f:
+        json.dump(summary, f)
+    if relaunches:
+        print(f"completed with {relaunches} relaunch(es); node swaps: "
+              f"{result.replaced}")
+    return result
 
 
 def main():
@@ -152,11 +243,30 @@ def main():
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="simulated device mesh, e.g. '4,2' = (data, model); "
+                         "forces data*model CPU host devices")
+    ap.add_argument("--opt-shard", default="none",
+                    choices=["none", "so", "epso"],
+                    help="optimizer-state sharding (paper §3.2)")
+    ap.add_argument("--n-buffer", type=int, default=2,
+                    help="buffer nodes for hard-failure replacement")
+    ap.add_argument("--inject-hard-at", type=int, default=None,
+                    help="inject one hard node failure at this step "
+                         "(also REPRO_INJECT_HARD_AT)")
+    ap.add_argument("--inject-soft-at", type=int, default=None,
+                    help="inject one soft (NaN) failure at this step "
+                         "(also REPRO_INJECT_SOFT_AT)")
     args = ap.parse_args()
     run(args.arch, scale=args.scale, steps=args.steps, batch=args.batch,
         seq=args.seq, out=args.out, lr=args.lr, moe_impl=args.moe_impl,
         fur=args.fur, microbatches=args.microbatches, sac=args.sac,
-        d_model=args.d_model, layers=args.layers, seed=args.seed)
+        d_model=args.d_model, layers=args.layers, seed=args.seed,
+        ckpt_interval=args.ckpt_interval, mesh=args.mesh,
+        opt_shard=args.opt_shard, n_buffer=args.n_buffer,
+        inject_hard_at=args.inject_hard_at,
+        inject_soft_at=args.inject_soft_at)
 
 
 if __name__ == "__main__":

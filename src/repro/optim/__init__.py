@@ -1,3 +1,4 @@
 from .adamw import AdamWState, adamw_init, adamw_update
 from .schedule import warmup_cosine
-from .epso import optimizer_state_specs
+from .epso import (optimizer_state_specs, optimizer_state_shardings,
+                   state_bytes_per_device)

@@ -249,3 +249,15 @@ def shardings(params, rules: ShardingRules):
         return None
     return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
                         param_specs(params, rules))
+
+
+def batch_sharding(rules: ShardingRules):
+    """NamedSharding for (B, S[, ...]) input batches: batch dim over the
+    resolved batch axes, everything else replicated. None off-mesh — callers
+    can always ``jax.device_put(batch, batch_sharding(rules) or ...)``."""
+    if rules is None or rules.mesh is None:
+        return None
+    b = tuple(rules.batch_axes)
+    if not b:
+        return NamedSharding(rules.mesh, P())
+    return NamedSharding(rules.mesh, P(b if len(b) > 1 else b[0]))

@@ -1,2 +1,2 @@
 from .trainer import (TrainState, make_train_step, make_serve_step,
-                      make_prefill_step, init_state)
+                      make_prefill_step, init_state, train_state_shardings)

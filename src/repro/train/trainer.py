@@ -20,11 +20,14 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
 from repro.models import (init_params, loss_fn, forward, init_cache,
                           decode_step, prefill_with_cache)
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
+from repro.optim.epso import optimizer_state_shardings
+from repro.parallel.sharding import make_rules, shardings as param_shardings
 
 
 class TrainState(NamedTuple):
@@ -32,16 +35,61 @@ class TrainState(NamedTuple):
     opt: AdamWState       # fp32 master + moments
 
 
-def init_state(rng, cfg: ModelConfig, train: TrainConfig) -> TrainState:
+def train_state_shardings(params, rules, mode: str = "none"):
+    """TrainState-shaped NamedSharding pytree: params per ``param_specs``,
+    AdamW master/m/v per ``optimizer_state_specs(mode)`` (paper §3.2 SO/EPSO
+    placement), the step counter replicated. ``params`` may be concrete
+    arrays or ShapeDtypeStructs — only shapes are read. Returns None off-mesh.
+    """
+    if rules is None or rules.mesh is None:
+        return None
+    psh = param_shardings(params, rules)
+    osh = optimizer_state_shardings(params, rules, mode)
+    rep = NamedSharding(rules.mesh, P())
+    return TrainState(psh, AdamWState(rep, osh, osh, osh))
+
+
+def _resolve_rules(cfg, train, rules, mesh):
+    if rules is None and mesh is not None:
+        rules = make_rules(cfg, mesh, kind="train",
+                           global_batch=train.global_batch)
+    return rules
+
+
+def init_state(rng, cfg: ModelConfig, train: TrainConfig, *, rules=None,
+               mesh=None, opt_sharding_mode: str = "none") -> TrainState:
+    """Initialize params + AdamW state. With ``rules``/``mesh``, every leaf
+    is device_put onto its SO/EPSO sharding right after host init, so the
+    first jitted step sees exactly the placement it was compiled for. (The
+    state is still materialized on one device first — models that only fit
+    sharded would jit init with these shardings as ``out_shardings``.)"""
+    rules = _resolve_rules(cfg, train, rules, mesh)
     params = init_params(rng, cfg)
     opt = adamw_init(params)
     pd = jnp.dtype(train.param_dtype)
     params = jax.tree.map(lambda p: p.astype(pd), params)
-    return TrainState(params, opt)
+    state = TrainState(params, opt)
+    sh = train_state_shardings(params, rules, opt_sharding_mode)
+    if sh is not None:
+        state = jax.tree.map(jax.device_put, state, sh)
+    return state
 
 
 def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
-                    train: TrainConfig, *, rules=None, mesh=None):
+                    train: TrainConfig, *, rules=None, mesh=None,
+                    opt_sharding_mode: Optional[str] = None,
+                    state_shardings=None):
+    """Build the train step. With ``opt_sharding_mode`` set ('none'|'so'|
+    'epso') the step is returned jitted with the optimizer-state shardings as
+    ``out_shardings`` — XLA derives the paper's reduce-scatter (grads into
+    state shards) and all-gather (updated params) from the placement
+    mismatch. A caller that already holds the ``train_state_shardings`` tree
+    can pass it as ``state_shardings`` to skip the abstract init re-trace.
+    With ``opt_sharding_mode=None`` (default) the raw function is returned
+    and the caller jits it (legacy single-device path)."""
+    rules = _resolve_rules(cfg, train, rules, mesh)
+    if mesh is None and rules is not None:
+        mesh = rules.mesh
     cd = jnp.dtype(train.compute_dtype)
     pd = jnp.dtype(train.param_dtype)
     rd = jnp.dtype(train.grad_reduce_dtype)
@@ -98,7 +146,17 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
         out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
         return TrainState(new_params, new_opt), out_metrics
 
-    return train_step
+    if opt_sharding_mode is None:
+        return train_step
+    if rules is None or rules.mesh is None:
+        return jax.jit(train_step)
+    ssh = state_shardings
+    if ssh is None:
+        shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        ssh = train_state_shardings(shapes, rules, opt_sharding_mode)
+    # metrics subtree: None = unconstrained (scalars; XLA replicates them)
+    return jax.jit(train_step, out_shardings=(ssh, None))
 
 
 def make_prefill_step(cfg: ModelConfig, *, rules=None, mesh=None,

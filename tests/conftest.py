@@ -34,3 +34,56 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device subprocess sessions (the `distributed` marker's substrate):
+# the main pytest process keeps its single-device view; mesh tests run their
+# snippet in a child process whose backend is forced to 8 CPU host devices.
+# ---------------------------------------------------------------------------
+
+_ROOT = os.path.dirname(_HERE)
+_N_FORCED = 8
+_mesh8_ok = None
+
+
+def _mesh8_env():
+    from repro.launch.mesh import forced_device_env
+    env = forced_device_env(_N_FORCED)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _mesh8_available() -> bool:
+    global _mesh8_ok
+    if _mesh8_ok is None:
+        import subprocess
+        try:
+            r = subprocess.run(
+                [sys.executable, "-c",
+                 f"import jax; assert len(jax.devices()) == {_N_FORCED}"],
+                capture_output=True, env=_mesh8_env(), timeout=300)
+            _mesh8_ok = r.returncode == 0
+        except Exception:
+            _mesh8_ok = False
+    return _mesh8_ok
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """Callable running a python snippet in a subprocess with 8 forced CPU
+    host devices; returns its stdout, asserts exit 0, and skips the test
+    cleanly when the platform can't force host devices."""
+    if not _mesh8_available():
+        pytest.skip(f"cannot force {_N_FORCED} CPU host devices")
+    import subprocess
+    import textwrap
+
+    def run_sub(code: str, timeout: int = 900) -> str:
+        r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                           capture_output=True, text=True, env=_mesh8_env(),
+                           timeout=timeout)
+        assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+        return r.stdout
+
+    return run_sub

@@ -1,32 +1,27 @@
 """Distributed semantics tests — run in a subprocess with 8 forced host
-devices so the main pytest process keeps its single-device view."""
-import os
-import subprocess
-import sys
-import textwrap
-
+devices (the ``mesh8`` conftest fixture) so the main pytest process keeps
+its single-device view."""
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+pytestmark = pytest.mark.distributed
 
 
-def run_sub(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, timeout=600)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+def test_parse_mesh_spec():
+    from repro.launch.mesh import parse_mesh_spec
+    assert parse_mesh_spec("8") == ((8,), ("data",))
+    assert parse_mesh_spec("4,2") == ((4, 2), ("data", "model"))
+    assert parse_mesh_spec("2,2,2") == ((2, 2, 2), ("pod", "data", "model"))
+    with pytest.raises(ValueError):
+        parse_mesh_spec("1,2,3,4")
 
 
 @pytest.mark.slow
-def test_fsmoe_ep_matches_naive_with_grads():
+def test_fsmoe_ep_matches_naive_with_grads(mesh8):
     """Paper Algorithm 1 under a real 2x4 (data, model) mesh: forward and
     gradients equal the naive single-device reference; the collective
     schedule contains Stage-1 all-gather + Stage-5 reduce-scatter and no
     all-to-all."""
-    out = run_sub("""
+    out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.compat import AxisType
@@ -65,11 +60,11 @@ def test_fsmoe_ep_matches_naive_with_grads():
 
 
 @pytest.mark.slow
-def test_fsmoe_a2a_dispatch_matches_naive():
+def test_fsmoe_a2a_dispatch_matches_naive(mesh8):
     """Beyond-paper Stage-1 variant (EXPERIMENTS §Perf): capacity-bounded
     all-to-all dispatch is numerically identical to the allgather path and
     the naive reference in the dropless regime."""
-    out = run_sub("""
+    out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.compat import AxisType
@@ -106,10 +101,10 @@ def test_fsmoe_a2a_dispatch_matches_naive():
 
 
 @pytest.mark.slow
-def test_moe_etp_shard_map_matches_naive():
+def test_moe_etp_shard_map_matches_naive(mesh8):
     """Beyond-paper ETP path (mixtral hillclimb): local dispatch + one psum
     over the model axis; exact vs the naive reference."""
-    out = run_sub("""
+    out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.compat import AxisType
@@ -146,9 +141,9 @@ def test_moe_etp_shard_map_matches_naive():
 
 
 @pytest.mark.slow
-def test_sharded_train_step_matches_single_device():
+def test_sharded_train_step_matches_single_device(mesh8):
     """pjit train_step on a (2,4) mesh == single-device train_step."""
-    out = run_sub("""
+    out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.compat import AxisType
@@ -194,9 +189,9 @@ def test_sharded_train_step_matches_single_device():
 
 
 @pytest.mark.slow
-def test_epso_state_placement_on_devices():
+def test_epso_state_placement_on_devices(mesh8):
     """EPSO states occupy fewer bytes per device than SO on a real mesh."""
-    out = run_sub("""
+    out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.compat import AxisType
         from repro.configs import get_config, reduced

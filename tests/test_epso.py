@@ -105,3 +105,143 @@ def test_multi_pod_specs(moe_setup):
     epso = optimizer_state_specs(shapes, rules, "epso")
     used = _axes_used(epso["layers"]["attn"]["wq"])
     assert "pod" in used or "data" in used
+
+
+# ---------------------------------------------------------------------------
+# SO/EPSO parity: placement must not change the math (ISSUE 2 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_so_epso_parity_and_bytes(mesh8):
+    """Identical seeds/batches under mode='so' vs 'epso' give allclose losses
+    and params for 10 steps on a (4,2) mesh; epso strictly beats so on
+    per-device state bytes (the model axis is nontrivial)."""
+    out = mesh8("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ParallelConfig, TrainConfig, get_config, reduced
+        from repro.launch.mesh import make_sim_mesh
+        from repro.optim.epso import state_bytes_per_device
+        from repro.parallel.sharding import make_rules
+        from repro.train import init_state, make_train_step
+
+        mesh = make_sim_mesh("4,2")
+        cfg = reduced(get_config("mula-7b-a1b"), d_model=64)
+        tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                         grad_reduce_dtype="float32", lr_peak=1e-3,
+                         lr_min=1e-4, warmup_steps=2, total_steps=10,
+                         seq_len=32, global_batch=8)
+        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
+        batches = []
+        for s in range(10):
+            t = jax.random.randint(jax.random.PRNGKey(100 + s), (8, 33), 0,
+                                   cfg.vocab_size)
+            batches.append({"tokens": t[:, :-1], "labels": t[:, 1:]})
+        results = {}
+        for mode in ("so", "epso"):
+            state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
+                               opt_sharding_mode=mode)
+            fn = make_train_step(cfg, ParallelConfig(), tc, rules=rules,
+                                 mesh=mesh, opt_sharding_mode=mode)
+            losses = []
+            for b in batches:
+                state, m = fn(state, b)
+                losses.append(float(m["loss"]))
+            results[mode] = (state, losses)
+        lso, lep = results["so"][1], results["epso"][1]
+        assert np.allclose(lso, lep, rtol=1e-5), (lso, lep)
+        for a, b in zip(jax.tree.leaves(results["so"][0].params),
+                        jax.tree.leaves(results["epso"][0].params)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        params = results["so"][0].params
+        so_b = state_bytes_per_device(params, rules, "so")
+        ep_b = state_bytes_per_device(params, rules, "epso")
+        assert ep_b < so_b, (ep_b, so_b)
+        print("OK", so_b, ep_b)
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# property tests for epso._augment (hypothesis / deterministic stub)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.optim.epso import _augment  # noqa: E402
+
+_PROP_MESHES = [
+    ((16, 16), ("data", "model")),
+    ((2, 4), ("data", "model")),
+    ((4, 2), ("data", "model")),
+    ((8, 1), ("data", "model")),
+    ((1, 8), ("data", "model")),
+    ((8,), ("data",)),
+    ((2, 2, 2), ("pod", "data", "model")),
+    ((2, 4, 4), ("pod", "data", "model")),
+]
+
+
+def _prop_mesh(i):
+    shape, axes = _PROP_MESHES[i]
+    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def _entry_axes(e):
+    return tuple(a for a in (e if isinstance(e, tuple) else (e,))
+                 if a is not None)
+
+
+def _base_spec(mesh, shape, choice):
+    """A valid param-style base spec: replicated, or 'model' on the first
+    dim that divides it (mirrors what param_specs produces)."""
+    options = [P()]
+    if "model" in mesh.shape:
+        n = mesh.shape["model"]
+        for i, d in enumerate(shape):
+            if d % n == 0 and n > 1:
+                options.append(P(*([None] * i + ["model"])))
+                break
+    return options[choice % len(options)]
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, len(_PROP_MESHES) - 1),
+       st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 17, 24, 32, 64]),
+                min_size=1, max_size=3),
+       st.integers(0, 3))
+def test_augment_properties(mesh_i, shape, spec_choice):
+    mesh = _prop_mesh(mesh_i)
+    shape = tuple(shape)
+    base = _base_spec(mesh, shape, spec_choice)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    group = dp + (("model",) if "model" in mesh.shape else ())
+    aug = _augment(base, shape, [group], mesh)
+
+    assert len(aug) <= len(shape)
+    # 1) never double-uses a mesh axis
+    used = [a for e in aug for a in _entry_axes(e)]
+    assert len(used) == len(set(used)), (aug, shape)
+    # 2) base sharding is preserved (augment only adds)
+    for i, e in enumerate(base):
+        for a in _entry_axes(e):
+            assert a in _entry_axes(aug[i]) or aug[i] == e, (base, aug)
+    # 3) every named axis divides its dim
+    for i, e in enumerate(aug):
+        n = 1
+        for a in _entry_axes(e):
+            assert a in mesh.shape
+            n *= mesh.shape[a]
+        assert shape[i] % n == 0, (aug, shape, mesh.shape)
+    # 4) leaves too small to divide stay replicated: if no unsharded dim is
+    #    divisible by any size>1 axis of the group, the spec is unchanged
+    base_axes = {a for e in base for a in _entry_axes(e)}
+    remaining = [a for a in group if a not in base_axes]
+    base_entries = list(base) + [None] * (len(shape) - len(base))
+    divisible = any(
+        base_entries[i] is None
+        and any(mesh.shape[a] > 1 and shape[i] % mesh.shape[a] == 0
+                for a in remaining)
+        for i in range(len(shape)))
+    if not divisible:
+        assert aug == base, (base, aug, shape)

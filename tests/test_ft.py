@@ -55,3 +55,64 @@ def test_run_recovers_from_soft_and_hard_failures(tmp_path):
     assert len(cluster.replaced) == 2
     # soft failure consumed a NaN step but training still completed
     assert calls["hard_done"] and calls["soft_done"]
+
+
+def test_failure_before_first_checkpoint_resets_to_initial(tmp_path):
+    """A failure with no valid checkpoint yet must restart from the *initial*
+    state, not keep partial updates (which would double-apply early steps)."""
+    ck = Checkpointer(str(tmp_path), interval=5)
+    cluster = ClusterManager(n_active=2, n_buffer=1)
+    calls = {"done": False}
+
+    def train_one_step(state, step):
+        if step == 2 and not calls["done"]:
+            calls["done"] = True
+            raise NodeFailure(0, "hard")
+        return {"w": state["w"] + 1.0}, {"loss": 1.0}
+
+    state, step, relaunches = run_with_failure_handling(
+        train_one_step, state={"w": np.zeros(1)}, checkpointer=ck,
+        cluster=cluster, num_steps=4)
+    assert step == 4 and relaunches == 1
+    assert state["w"][0] == 4.0      # not 6.0: steps 0-1 replayed, not stacked
+
+
+def test_launcher_fault_injection_matches_uninterrupted(tmp_path):
+    """ISSUE 2 satellite: the real launcher path (repro.launch.train.run ->
+    run_with_failure_handling) recovers a hard failure at step 7 and a soft
+    NaN at step 12 via buffer-node swaps + restore-from-newest-valid, and the
+    replayed run is bit-identical to an uninterrupted one."""
+    import json
+
+    from repro.launch.train import run
+
+    kw = dict(steps=18, batch=4, seq=32, d_model=64, ckpt_interval=5,
+              log_every=100)
+    clean = run("mula-1b", out=str(tmp_path / "clean"), **kw)
+    faulty = run("mula-1b", out=str(tmp_path / "faulty"),
+                 inject_hard_at=7, inject_soft_at=12, **kw)
+
+    # one buffer-node swap per failure
+    assert faulty.relaunches == 2
+    assert len(faulty.replaced) == 2
+    assert clean.relaunches == 0
+
+    # restore-from-newest-valid: the dual slots hold the two newest ckpts
+    # (steps 10 and 15), not anything stale from before the failures
+    root = tmp_path / "faulty" / "ckpt"
+    slot_steps = set()
+    for slot in ("ckpt-1", "ckpt-2"):
+        with open(root / slot / "MANIFEST.json") as f:
+            m = json.load(f)
+        assert m["valid"]
+        slot_steps.add(m["step"])
+    assert slot_steps == {10, 15}
+
+    # replayed history (and so the final loss) is bit-identical
+    assert [h["loss"] for h in clean] == [h["loss"] for h in faulty]
+    assert [h["step"] for h in faulty] == list(range(18))
+
+    # summary.json records the fault-tolerance outcome
+    with open(tmp_path / "faulty" / "summary.json") as f:
+        summary = json.load(f)
+    assert summary["relaunches"] == 2 and summary["steps"] == 18
