@@ -19,12 +19,27 @@ dry-run produces (spec: derive terms from the compiled artifact):
   modeled as 1 + c*sqrt(E ln E / T_ep); FUR removes it (paper observes both
   curves track — imbalance is small at these token counts, which this model
   reproduces).
+
+Measured counterpart (``python benchmarks/bench_scaling.py``): a subprocess
+with 8 forced CPU host devices runs the *real* jitted pipeline train step
+(launch path: (data, pp, model) mesh + 1f1b/gpipe schedule masks) for
+pp in {1, 2, 4}, validates the analytic bubble fraction against the actual
+tick tables the executor walks, and writes ``BENCH_pp.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import math
+import os
+import subprocess
+import sys
 
 import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(ROOT, "src") not in sys.path:      # direct-script invocation
+    sys.path.insert(0, os.path.join(ROOT, "src"))
 
 from repro.configs import get_config
 from repro.launch.roofline import LINK_BW, PEAK_FLOPS
@@ -82,3 +97,114 @@ def run(report):
             tag = "fur" if fur else "routed"
             report(f"scaling_eff_{tag}[{n}tiles]", e * 100,
                    derived=f"paper~{'90' if n >= 1536 else '97-100'}%")
+
+
+# ---------------------------------------------------------------------------
+# measured: the jitted PP step on a simulated (data, pp, model) mesh
+# ---------------------------------------------------------------------------
+
+PP_POINTS = [(1, None), (2, "gpipe"), (2, "1f1b"), (4, "gpipe"), (4, "1f1b")]
+N_MB = 8
+
+
+def measure_pp(steps: int = 5, d_model: int = 64, layers: int = 4,
+               seq: int = 32, batch: int = 8) -> dict:
+    """Runs inside a process whose backend sees 8 devices: time the real
+    jitted train step for each PP point and validate the analytic bubble
+    fraction against the tick table the executor actually walks."""
+    import time
+
+    import jax
+
+    from repro.configs import ParallelConfig, TrainConfig, reduced
+    from repro.launch.mesh import make_sim_mesh
+    from repro.parallel import pipeline as PP
+    from repro.parallel.sharding import batch_sharding, make_rules
+    from repro.train import init_state, make_train_step
+
+    cfg = reduced(get_config("mula-7b-a1b"), layers=layers, d_model=d_model)
+    tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                     grad_reduce_dtype="float32", lr_peak=1e-3, lr_min=1e-4,
+                     warmup_steps=2, total_steps=steps + 1, seq_len=seq,
+                     global_batch=batch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq + 1), 0,
+                              cfg.vocab_size)
+    host_batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    points = []
+    for pp, sched in PP_POINTS:
+        mesh = make_sim_mesh({1: "8", 2: "4,2,1", 4: "2,4,1"}[pp])
+        rules = make_rules(cfg, mesh, kind="train", global_batch=batch)
+        par = ParallelConfig(microbatches=N_MB, pp_stages=pp,
+                             pp_schedule=sched or "1f1b")
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
+                           opt_sharding_mode="epso")
+        step_fn = make_train_step(cfg, par, tc, rules=rules, mesh=mesh,
+                                  opt_sharding_mode="epso")
+        b = jax.tree.map(lambda a: jax.device_put(a, batch_sharding(rules)),
+                         host_batch)
+        state, m = step_fn(state, b)                 # compile + place
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step_fn(state, b)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / steps
+        entry = {"pp": pp, "schedule": sched, "loss": float(m["loss"]),
+                 "step_time_ms": dt * 1e3,
+                 "bubble_analytic": PP.bubble_fraction(N_MB, pp)}
+        if pp > 1:
+            masks = PP.schedule_masks(sched, N_MB, pp)
+            entry["ticks"] = int(masks["ticks"])
+            entry["bubble_ticktable"] = 1 - 2 * N_MB / masks["ticks"]
+            assert abs(entry["bubble_ticktable"]
+                       - entry["bubble_analytic"]) < 1e-9, entry
+        points.append(entry)
+    return {"arch": cfg.name, "d_model": d_model, "layers": layers,
+            "seq": seq, "batch": batch, "microbatches": N_MB,
+            "devices": len(jax.devices()), "points": points}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_pp.json"))
+    ap.add_argument("--_measure", action="store_true",
+                    help=argparse.SUPPRESS)   # child-process mode
+    args = ap.parse_args(argv)
+
+    if args._measure:
+        print(json.dumps(measure_pp(steps=args.steps)))
+        return
+
+    from repro.launch.mesh import forced_device_env
+    env = forced_device_env(8)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--_measure",
+         "--steps", str(args.steps)],
+        capture_output=True, text=True, env=env, timeout=3600)
+    if r.returncode != 0:
+        sys.stderr.write(r.stdout + r.stderr)
+        raise SystemExit("bench_scaling measured PP run failed")
+    result = json.loads(r.stdout.strip().splitlines()[-1])
+    # every point computes the same math, but each runs on a different mesh
+    # (different data-axis reduction orders), so cross-point agreement is
+    # only guaranteed to ~1 ulp — not bit-for-bit
+    pts = result["points"]
+    base = pts[0]["loss"]
+    for p in pts:
+        assert abs(p["loss"] - base) < 1e-5 * abs(base), pts
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for p in result["points"]:
+        sched = p["schedule"] or "-"
+        tick = p.get("bubble_ticktable")
+        print(f"pp={p['pp']} {sched:6s} step={p['step_time_ms']:7.1f}ms "
+              f"bubble={p['bubble_analytic']:.3f}"
+              + (f" (ticktable {tick:.3f})" if tick is not None else ""))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

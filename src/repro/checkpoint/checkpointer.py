@@ -95,7 +95,11 @@ class Checkpointer:
     gather-on-save (``np.asarray`` on a single-process sharded jax.Array
     assembles the global array) and reshard-on-restore (restored host arrays
     are ``device_put`` back onto ``shardings``, so an SO/EPSO run resumes
-    with the exact placement it was jitted for)."""
+    with the exact placement it was jitted for). This covers the pipeline
+    stage axis too: a pp-stage-sharded layer stack is gathered into one
+    stage-agnostic (L, ...) array on disk and resharded back onto its
+    P('pp', ...) placement on restore, so checkpoints are portable across
+    pipeline layouts."""
 
     def __init__(self, root: str, *, interval: int = 1000,
                  model_only_interval: int = 0, shardings=None):

@@ -189,10 +189,20 @@ class ParallelConfig:
     remat_policy: str = "block"     # none|norm|attn|moe|block(=full block inputs)
     # gradient accumulation microbatches inside train_step
     microbatches: int = 1
-    # pipeline parallelism (paper-faithful Mula-100B/220B path; not used on
-    # the prescribed 2-axis dry-run mesh)
+    # pipeline parallelism (paper-faithful Mula-100B/220B path): stages map
+    # onto the 'pp' mesh axis; microbatches become pipeline microbatches
     pp_stages: int = 1
     pp_schedule: str = "1f1b"       # gpipe | 1f1b
+
+    def __post_init__(self):
+        if self.pp_schedule not in ("gpipe", "1f1b"):
+            raise ValueError(f"pp_schedule must be 'gpipe' or '1f1b', "
+                             f"got {self.pp_schedule!r}")
+        if self.pp_stages < 1:
+            raise ValueError(f"pp_stages must be >= 1, got {self.pp_stages}")
+        if self.microbatches < 1:
+            raise ValueError(
+                f"microbatches must be >= 1, got {self.microbatches}")
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,7 @@ import numpy as np
 
 class ShardedDataLoader:
     def __init__(self, data_dir: str, *, global_batch: int,
-                 dp_rank: int = 0, dp_size: int = 1):
+                 dp_rank: int = 0, dp_size: int = 1, start_step: int = 0):
         with open(os.path.join(data_dir, "meta.json")) as f:
             self.meta = json.load(f)
         assert global_batch % dp_size == 0
@@ -22,6 +22,7 @@ class ShardedDataLoader:
         self.rank_batch = global_batch // dp_size
         self.dp_rank = dp_rank
         self.dp_size = dp_size
+        self.start_step = start_step     # where __iter__ (re)starts
         self._mmaps = [np.load(os.path.join(data_dir, s), mmap_mode="r")
                        for s in self.meta["shards"]]
         self._sizes = np.array([m.shape[0] for m in self._mmaps])
@@ -49,8 +50,26 @@ class ShardedDataLoader:
         inst = self._gather(start, self.rank_batch).astype(np.int32)
         return {"tokens": inst[:, :-1], "labels": inst[:, 1:]}
 
+    # ---- fault-tolerant resume ------------------------------------------
+    # The batch sequence is a pure function of the global step, so resume
+    # hygiene is just "restart the iterator at the restored step" — the
+    # launcher restores a checkpoint at step k and points the loader at k+1,
+    # replaying the exact batch order an uninterrupted run would have seen.
+    # The loader is ONE resumable stream: ``start_step`` is a shared step
+    # cursor that every iterator reads and advances on each next(), so
+    # ``load_state_dict`` re-points live iterators mid-flight and
+    # ``state_dict`` always names the next step to be served (a second
+    # ``iter()`` continues the stream rather than restarting at 0).
+
+    def state_dict(self) -> dict:
+        """``step`` = the next global step the iterator will serve."""
+        return {"step": self.start_step}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.start_step = int(state["step"])
+
     def __iter__(self):
-        step = 0
         while True:
-            yield self.batch(step)
-            step += 1
+            b = self.batch(self.start_step)
+            self.start_step += 1
+            yield b

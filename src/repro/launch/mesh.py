@@ -33,13 +33,16 @@ _FORCE_FLAG = "--xla_force_host_platform_device_count"
 
 def parse_mesh_spec(spec):
     """``'8'`` -> (data,), ``'4,2'`` -> (data, model), ``'2,2,2'`` ->
-    (pod, data, model). Returns (shape, axis_names)."""
+    (data, pp, model) — the 3D training mesh: DP x pipeline stages x
+    model(TP/EP) — and ``'2,2,2,2'`` -> (pod, data, pp, model).
+    Returns (shape, axis_names)."""
     dims = tuple(int(x) for x in str(spec).split(",") if x.strip())
-    if not 1 <= len(dims) <= 3 or any(d < 1 for d in dims):
+    if not 1 <= len(dims) <= 4 or any(d < 1 for d in dims):
         raise ValueError(f"bad mesh spec {spec!r} (want e.g. '8', '4,2', "
-                         f"'2,2,2')")
+                         f"'2,2,2', '2,2,2,2')")
     axes = {1: ("data",), 2: ("data", "model"),
-            3: ("pod", "data", "model")}[len(dims)]
+            3: ("data", "pp", "model"),
+            4: ("pod", "data", "pp", "model")}[len(dims)]
     return dims, axes
 
 

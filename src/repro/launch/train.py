@@ -16,8 +16,13 @@ injected hard node failure at step 12 via buffer-node swap + restore):
   PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
       --mesh 4,2 --opt-shard epso --steps 20 --inject-hard-at 12
 
-The ``--mesh R,C`` path forces R*C CPU host devices through XLA_FLAGS when
-the backend allows it (see launch/mesh.make_sim_mesh).
+Usage (3D (data, pp, model) mesh: 2-way DP x 2 pipeline stages x 2-way EP,
+jitted 1f1b schedule composed with EPSO + fault tolerance):
+  PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
+      --mesh 2,2,2 --opt-shard epso --pp-schedule 1f1b --steps 20
+
+The ``--mesh`` path forces the product of the axis sizes as CPU host devices
+through XLA_FLAGS when the backend allows it (see launch/mesh.make_sim_mesh).
 """
 from __future__ import annotations
 
@@ -89,7 +94,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         microbatches: int = 1, sac: str = "block", seed: int = 0,
         log_every: int = 10, d_model: int = 256, layers: int = 2,
         d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
-        opt_shard: str = "none", n_buffer: int = 2,
+        opt_shard: str = "none", pp_schedule: str = "1f1b",
+        n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
     if opt_shard != "none" and not mesh:
@@ -99,6 +105,22 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     # mesh first: make_sim_mesh must run before anything initializes the JAX
     # backend, or the forced host-device count cannot take effect.
     mesh_obj = make_sim_mesh(mesh) if mesh else None
+    # a 'pp' mesh axis of size > 1 turns on the jitted 1f1b/gpipe pipeline:
+    # pp_stages is the axis size; microbatches become pipeline microbatches.
+    pp_stages = int(mesh_obj.shape.get("pp", 1)) if mesh_obj is not None else 1
+    if pp_stages > 1 and microbatches == 1:
+        # only the untouched default is bumped; an explicit --microbatches
+        # is honored as-is (any value >= 1 pipelines, just with more bubble).
+        # The default must divide the batch — prefer 2*pp, fall back to pp.
+        for cand in (2 * pp_stages, pp_stages):
+            if batch % cand == 0:
+                microbatches = cand
+                print(f"pp={pp_stages}: pipeline microbatches defaulted to "
+                      f"{microbatches}")
+                break
+    if pp_stages > 1 and batch % microbatches != 0:
+        raise ValueError(f"--batch {batch} must divide into --microbatches "
+                         f"{microbatches} pipeline microbatches")
 
     cfg = get_config(arch)
     if scale == "smoke":
@@ -122,7 +144,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                         lr_min=lr / 10, warmup_steps=max(steps // 20, 5),
                         total_steps=steps, seq_len=seq, global_batch=batch,
                         seed=seed)
-    par = ParallelConfig(microbatches=microbatches, remat_policy=sac)
+    par = ParallelConfig(microbatches=microbatches, remat_policy=sac,
+                         pp_stages=pp_stages, pp_schedule=pp_schedule)
 
     rules = make_rules(cfg, mesh_obj, kind="train",
                        global_batch=batch) if mesh_obj is not None else None
@@ -159,11 +182,17 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     if restored is not None:
         state, start = restored, ck_step + 1   # ckpt holds post-step state
         print(f"resumed from step {start}")
+    # the loop consumes the loader's iterator; point it at the first step to
+    # run so a resumed run replays the exact batch sequence an uninterrupted
+    # one would have seen (never batch 0 again)
+    loader.load_state_dict({"step": start})
+    batches = iter(loader)
 
     nparams = sum(l.size for l in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={nparams/1e6:.1f}M "
           f"vocab={padded_vocab(cfg)} mesh={mesh or 'single'} "
-          f"opt_shard={opt_shard}")
+          f"opt_shard={opt_shard} pp={pp_stages}"
+          + (f":{pp_schedule}" if pp_stages > 1 else ""))
 
     injected = {"hard": False, "soft": False}
     history = {}          # keyed by step: replays after restore overwrite
@@ -174,7 +203,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             injected["hard"] = True
             print(f"  !! injected HARD failure on node 0 @ step {step}")
             raise NodeFailure(cluster.active[0].node_id, "hard")
-        batch_np = loader.batch(step)
+        batch_np = next(batches)     # == loader.batch(step): pure in step
         if cfg.arch_type == "vlm":
             batch_np["image_embeds"] = np.zeros(
                 (batch, cfg.num_prefix_embeds, cfg.d_model), np.float32)
@@ -204,10 +233,16 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         return state, {"loss": loss, "per_rank_losses": per_rank,
                        "per_rank_grad_norms": [gnorm]}
 
+    def on_relaunch(state, failure, step):
+        # rewind the batch stream to the restore point: the iterator re-reads
+        # the shared step cursor on every next(), so this re-points it
+        loader.load_state_dict({"step": step})
+        return state
+
     state, end_step, relaunches = run_with_failure_handling(
         train_one_step, state=state, checkpointer=ckpt, cluster=cluster,
         num_steps=steps, monitor=NaNMonitor(), start_step=start,
-        max_relaunches=max_relaunches)
+        max_relaunches=max_relaunches, on_relaunch=on_relaunch)
 
     result = RunResult(history[s] for s in sorted(history))
     result.relaunches = relaunches
@@ -215,7 +250,9 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     with open(os.path.join(out, "history.json"), "w") as f:
         json.dump(list(result), f)
     summary = {"arch": cfg.name, "steps": end_step, "mesh": mesh,
-               "opt_shard": opt_shard, "relaunches": relaunches,
+               "opt_shard": opt_shard, "pp_stages": pp_stages,
+               "pp_schedule": pp_schedule if pp_stages > 1 else None,
+               "relaunches": relaunches,
                "replaced": result.replaced,
                "final_loss": result[-1]["loss"] if result else None}
     with open(os.path.join(out, "summary.json"), "w") as f:
@@ -245,11 +282,17 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--mesh", default=None,
-                    help="simulated device mesh, e.g. '4,2' = (data, model); "
-                         "forces data*model CPU host devices")
+                    help="simulated device mesh: '4,2' = (data, model), "
+                         "'2,2,2' = (data, pp, model); forces that many CPU "
+                         "host devices; a pp axis > 1 enables the jitted "
+                         "pipeline schedule")
     ap.add_argument("--opt-shard", default="none",
                     choices=["none", "so", "epso"],
                     help="optimizer-state sharding (paper §3.2)")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=["gpipe", "1f1b"],
+                    help="pipeline microbatch schedule when the mesh has a "
+                         "pp axis (paper §2.2: Mula-100B/220B train 1f1b)")
     ap.add_argument("--n-buffer", type=int, default=2,
                     help="buffer nodes for hard-failure replacement")
     ap.add_argument("--inject-hard-at", type=int, default=None,
@@ -264,7 +307,8 @@ def main():
         fur=args.fur, microbatches=args.microbatches, sac=args.sac,
         d_model=args.d_model, layers=args.layers, seed=args.seed,
         ckpt_interval=args.ckpt_interval, mesh=args.mesh,
-        opt_shard=args.opt_shard, n_buffer=args.n_buffer,
+        opt_shard=args.opt_shard, pp_schedule=args.pp_schedule,
+        n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,
         inject_soft_at=args.inject_soft_at)
 

@@ -1,2 +1,4 @@
 from .model import (init_params, forward, loss_fn, init_cache, decode_step,
-                    prefill_with_cache, padded_vocab)
+                    prefill_with_cache, padded_vocab, masked_ce,
+                    embed_tokens, pipeline_stage_forward, lm_head_ce,
+                    PP_ARCH_TYPES)

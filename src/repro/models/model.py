@@ -305,14 +305,8 @@ def forward(params, batch: dict, cfg: ModelConfig, *,
 # loss
 # ----------------------------------------------------------------------------
 
-def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
-            sac: str = "block", compute_dtype=jnp.bfloat16):
-    """Next-token cross entropy (+ MoE aux losses). labels = -100 masked."""
-    logits, aux = forward(params, batch, cfg, rules=rules, mesh=mesh,
-                          sac=sac, compute_dtype=compute_dtype)
-    labels = batch["labels"]
-    if cfg.arch_type == "vlm":   # prefix image positions produce no loss
-        logits = logits[:, cfg.num_prefix_embeds:]
+def masked_ce(logits, labels, cfg: ModelConfig):
+    """Masked next-token CE over padded-vocab logits. Returns (ce, ntok)."""
     vp = padded_vocab(cfg)
     logits = logits.astype(jnp.float32)
     if vp != cfg.vocab_size:     # mask padded vocab columns out of the lse
@@ -324,7 +318,18 @@ def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
     ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
     nll = jnp.where(mask, lse - ll, 0.0)
     ntok = jnp.maximum(mask.sum(), 1)
-    ce = nll.sum() / ntok
+    return nll.sum() / ntok, ntok
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
+            sac: str = "block", compute_dtype=jnp.bfloat16):
+    """Next-token cross entropy (+ MoE aux losses). labels = -100 masked."""
+    logits, aux = forward(params, batch, cfg, rules=rules, mesh=mesh,
+                          sac=sac, compute_dtype=compute_dtype)
+    labels = batch["labels"]
+    if cfg.arch_type == "vlm":   # prefix image positions produce no loss
+        logits = logits[:, cfg.num_prefix_embeds:]
+    ce, ntok = masked_ce(logits, labels, cfg)
     total = ce
     if cfg.is_moe:
         total = total + cfg.moe.router_aux_coef * aux["moe_aux"] / cfg.num_layers
@@ -332,6 +337,58 @@ def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
     metrics = {"ce": ce, "moe_aux": aux["moe_aux"] / max(cfg.num_layers, 1),
                "moe_z": aux["moe_z"] / max(cfg.num_layers, 1), "ntok": ntok}
     return total, metrics
+
+
+# ----------------------------------------------------------------------------
+# pipeline-stage pieces (the jitted PP train path; parallel/pipeline.py)
+# ----------------------------------------------------------------------------
+
+PP_ARCH_TYPES = ("dense", "moe", "ssm")   # uniform scanned 'layers' stacks
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, *,
+                 compute_dtype=jnp.bfloat16):
+    """Stage-0 input: token embedding, exactly as ``forward`` computes it."""
+    return L.embed(params["embed"], tokens, compute_dtype)
+
+
+def pipeline_stage_forward(stage_lp, h, cfg: ModelConfig, *, sac: str = ""):
+    """Apply one pipeline stage's (L/pp, ...)-stacked layer slice to ``h``.
+
+    The same block functions and scan the full ``forward`` uses, so running
+    the pp stage slices back-to-back reproduces the sequential model
+    bit-for-bit. Blocks run without sharding-rule constraints (the PP
+    executor pins placement at stage granularity instead); MoE stages
+    therefore always take the auto-shardable dense-capacity path
+    (``c_align=1``), never the EP shard_map path. Returns
+    (h, moe_aux, moe_z)."""
+    at = cfg.arch_type
+    if at not in PP_ARCH_TYPES:
+        raise ValueError(
+            f"pipeline parallelism supports arch_type in {PP_ARCH_TYPES}, "
+            f"not {at!r} (non-uniform layer stacks)")
+    if at == "moe":
+        return _scan_layers_aux(
+            stage_lp, h,
+            lambda lp, hh: _moe_block(lp, hh, cfg, None, sac, None), sac)
+    if at == "dense":
+        h = _scan_layers(stage_lp, h,
+                         lambda lp, hh: _dense_block(lp, hh, cfg, None, sac),
+                         sac)
+    else:
+        h = _scan_layers(stage_lp, h,
+                         lambda lp, hh: _ssm_block(lp, hh, cfg, None, sac),
+                         sac)
+    return h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def lm_head_ce(params, h, labels, cfg: ModelConfig):
+    """Last-stage tail: final norm + unembed + masked CE — the same ops
+    ``forward`` + ``loss_fn`` apply after the layer stack. Returns ce."""
+    h = L.apply_norm(params["final_norm"], h, cfg.norm)
+    head = params.get("head", params["embed"])
+    ce, _ = masked_ce(L.unembed(head, h), labels, cfg)
+    return ce
 
 
 # ----------------------------------------------------------------------------

@@ -36,6 +36,7 @@ class ShardingRules:
     tp_axis: Optional[str]       # 'model' when TP active, else None
     ep_axis: Optional[str]       # 'model' when EP active, else None
     fsdp: bool = False           # also shard params over data axes (ZeRO-3)
+    pp_axis: Optional[str] = None  # 'pp' when pipeline stages are meshed
     cfg: object = None           # ModelConfig (for divisibility checks)
 
     # ---- helpers -----------------------------------------------------------
@@ -121,6 +122,9 @@ def make_rules(cfg, mesh: Optional[Mesh], *, role: Optional[str] = None,
     axes = list(mesh.shape.keys())
     data_axes = tuple(a for a in axes if a in ("pod", "data"))
     has_model = "model" in axes
+    # a pp axis of size > 1 stage-shards the stacked layer dim (param_specs);
+    # it never carries batch or tensor dims.
+    pp = "pp" if ("pp" in axes and mesh.shape["pp"] > 1) else None
 
     if role is None:
         if cfg.is_moe:
@@ -132,16 +136,18 @@ def make_rules(cfg, mesh: Optional[Mesh], *, role: Optional[str] = None,
         if not ep_ok:
             role = "etp"    # e.g. mixtral 8e on 16-way axis
     if role == "ep":
-        batch = resolve_batch_axes(global_batch, mesh, data_axes + ("model",))
+        cand = data_axes + (("model",) if has_model else ())
+        batch = resolve_batch_axes(global_batch, mesh, cand)
         if "model" not in batch:
             # batch not divisible across data x model: tokens are resharded
             # over 'model' inside the MoE block instead (shard_map in_specs)
             batch = resolve_batch_axes(global_batch, mesh, data_axes)
-        return ShardingRules(mesh, batch, None, "model",
-                             fsdp=bool(fsdp), cfg=cfg)
+        return ShardingRules(mesh, batch, None, "model" if has_model else None,
+                             fsdp=bool(fsdp), pp_axis=pp, cfg=cfg)
     batch = resolve_batch_axes(global_batch, mesh, data_axes)
     tp = "model" if has_model else None
-    return ShardingRules(mesh, batch, tp, None, fsdp=bool(fsdp), cfg=cfg)
+    return ShardingRules(mesh, batch, tp, None, fsdp=bool(fsdp), pp_axis=pp,
+                         cfg=cfg)
 
 
 # ----------------------------------------------------------------------------
@@ -222,7 +228,10 @@ def _param_spec(path: str, shape, rules: ShardingRules) -> P:
 
 def param_specs(params, rules: ShardingRules):
     """PartitionSpec pytree for a param tree. Layer-stacked leaves have a
-    leading layer dim — specs are computed on the per-layer shape and shifted."""
+    leading layer dim — specs are computed on the per-layer shape and
+    shifted. When the mesh has a ``pp`` axis, the uniform ``layers`` stack's
+    leading dim is sharded over it (contiguous L/pp layer slices = pipeline
+    stages), so each stage's devices hold exactly its layer slice."""
     def spec_for(path_parts, leaf):
         path = "/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                               for p in path_parts)
@@ -235,11 +244,16 @@ def param_specs(params, rules: ShardingRules):
             n_stack = 1
             if "groups/" in path:
                 n_stack = 2        # (G, every, ...)
+        stack_entries = [None] * n_stack
+        if (n_stack == 1 and rules.pp_axis is not None
+                and path.startswith("/layers/")
+                and shape[0] % rules._axis_size(rules.pp_axis) == 0):
+            stack_entries[0] = rules.pp_axis
         inner_shape = shape[n_stack:]
         # normalize the path so _param_spec's endswith-matching sees the
         # module-local names
         spec = _param_spec(path, inner_shape, rules)
-        return P(*([None] * n_stack + list(spec)))
+        return P(*(stack_entries + list(spec)))
 
     return jax.tree_util.tree_map_with_path(spec_for, params)
 

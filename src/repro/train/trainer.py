@@ -24,9 +24,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
 from repro.models import (init_params, loss_fn, forward, init_cache,
-                          decode_step, prefill_with_cache)
+                          decode_step, prefill_with_cache, embed_tokens,
+                          pipeline_stage_forward, lm_head_ce, PP_ARCH_TYPES)
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
 from repro.optim.epso import optimizer_state_shardings
+from repro.parallel.pipeline import pipelined_loss_and_grads, stack_stages
 from repro.parallel.sharding import make_rules, shardings as param_shardings
 
 
@@ -86,7 +88,16 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
     mismatch. A caller that already holds the ``train_state_shardings`` tree
     can pass it as ``state_shardings`` to skip the abstract init re-trace.
     With ``opt_sharding_mode=None`` (default) the raw function is returned
-    and the caller jits it (legacy single-device path)."""
+    and the caller jits it (legacy single-device path).
+
+    With ``parallel.pp_stages > 1`` the loss/grad computation runs through
+    the jitted 1f1b/gpipe pipeline executor instead of the microbatch
+    accumulation scan: the layer stack is stage-sharded over the 'pp' mesh
+    axis, ``parallel.microbatches`` become the pipeline microbatches, and
+    activations/cotangents hand off between stages via ppermute
+    (``parallel.pipeline.pipelined_loss_and_grads``). The optimizer tail
+    (cast, LR, clip, AdamW, SO/EPSO placement) is shared with the non-PP
+    path."""
     rules = _resolve_rules(cfg, train, rules, mesh)
     if mesh is None and rules is not None:
         mesh = rules.mesh
@@ -94,19 +105,72 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
     pd = jnp.dtype(train.param_dtype)
     rd = jnp.dtype(train.grad_reduce_dtype)
     nmb = parallel.microbatches
+    pp = parallel.pp_stages
+    if pp > 1 and cfg.arch_type not in PP_ARCH_TYPES:
+        raise ValueError(f"pp_stages={pp} needs arch_type in {PP_ARCH_TYPES},"
+                         f" not {cfg.arch_type!r}")
 
     def loss_for(params, mb):
         return loss_fn(params, mb, cfg, rules=rules, mesh=mesh,
                        sac=parallel.remat_policy, compute_dtype=cd)
 
+    def split_mb(batch, n):
+        """(B, ...) -> (n, B/n, ...) microbatch view — shared by the PP and
+        acc_step paths so their splits can never diverge."""
+        return jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+    def pp_loss_and_grads(params, batch):
+        """Pipelined loss+grads: bit-equal math to running the stage slices
+        sequentially per microbatch and summing grads in microbatch order
+        (the acc_step contract), executed in 1f1b/gpipe schedule order."""
+        n_mb = max(nmb, 1)
+        mbs = split_mb(batch, n_mb)
+        io_params = {k: v for k, v in params.items() if k != "layers"}
+        stage_params = stack_stages(params["layers"], pp, name=cfg.name)
+
+        def stage_fn(io, lp, x, mb, sid):
+            emb = embed_tokens(io, mb["tokens"], cfg, compute_dtype=cd)
+            h = jnp.where(sid == 0, emb, x)          # stage 0 ingests tokens
+            # NOTE: PP stages run the MoE dense-capacity path (c_align=1),
+            # not the non-PP EP shard_map variant — GSPMD still shards the
+            # expert compute via the param placement, but capacity behavior
+            # matches the single-device reference (the parity tests' basis)
+            h, aux, z = pipeline_stage_forward(lp, h, cfg,
+                                               sac=parallel.remat_policy)
+            ce = lm_head_ce(io, h, mb["labels"], cfg)  # masked off-last-stage
+            return h, {"ce": ce, "aux": aux, "z": z}
+
+        ca = cfg.moe.router_aux_coef if cfg.is_moe else 0.0
+        cz = cfg.moe.router_z_coef if cfg.is_moe else 0.0
+        nl = max(cfg.num_layers, 1)
+        cots = {"ce": (jnp.arange(pp) == pp - 1).astype(jnp.float32),
+                "aux": jnp.full((pp,), ca / nl, jnp.float32),
+                "z": jnp.full((pp,), cz / nl, jnp.float32)}
+        mb_b = batch["tokens"].shape[0] // n_mb
+        seq = batch["tokens"].shape[1]
+        ssum, g_io, g_stage = pipelined_loss_and_grads(
+            stage_fn, io_params, stage_params, mbs, cots,
+            act_shape=(mb_b, seq, cfg.d_model), act_dtype=cd,
+            schedule=parallel.pp_schedule, mesh=mesh,
+            batch_axes=tuple(rules.batch_axes) if rules is not None else ())
+        grads = dict(g_io)
+        grads["layers"] = jax.tree.map(lambda g, p: g.reshape(p.shape),
+                                       g_stage, params["layers"])
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        ce = ssum["ce"][pp - 1] / n_mb
+        aux = ssum["aux"].sum() / n_mb
+        z = ssum["z"].sum() / n_mb
+        loss = ce + (ca * aux + cz * z) / nl
+        return loss, {"ce": ce}, grads
+
     def train_step(state: TrainState, batch: dict):
         params = state.params
 
-        if nmb > 1:
-            def split(x):
-                return x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
-
-            mbs = jax.tree.map(split, batch)
+        if pp > 1:
+            loss, metrics, grads = pp_loss_and_grads(params, batch)
+        elif nmb > 1:
+            mbs = split_mb(batch, nmb)
 
             def acc_step(carry, mb):
                 gacc, lacc, macc = carry

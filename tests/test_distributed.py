@@ -10,9 +10,13 @@ def test_parse_mesh_spec():
     from repro.launch.mesh import parse_mesh_spec
     assert parse_mesh_spec("8") == ((8,), ("data",))
     assert parse_mesh_spec("4,2") == ((4, 2), ("data", "model"))
-    assert parse_mesh_spec("2,2,2") == ((2, 2, 2), ("pod", "data", "model"))
+    assert parse_mesh_spec("2,2,2") == ((2, 2, 2), ("data", "pp", "model"))
+    assert parse_mesh_spec("2,2,2,2") == ((2, 2, 2, 2),
+                                          ("pod", "data", "pp", "model"))
     with pytest.raises(ValueError):
-        parse_mesh_spec("1,2,3,4")
+        parse_mesh_spec("1,2,3,4,5")
+    with pytest.raises(ValueError):
+        parse_mesh_spec("")
 
 
 @pytest.mark.slow

@@ -118,3 +118,52 @@ def test_split_stages():
     np.testing.assert_array_equal(
         np.concatenate([np.asarray(s["w"]) for s in stages]),
         np.asarray(stacked["w"]))
+
+
+def test_split_stages_indivisible_raises_value_error():
+    stacked = {"w": jnp.zeros((6, 3))}
+    with pytest.raises(ValueError, match=r"mula-test.*6 layers.*pp_stages=4"):
+        PP.split_stages(stacked, 4, name="mula-test")
+    with pytest.raises(ValueError, match="pp_stages"):
+        PP.stack_stages(stacked, 4)
+    with pytest.raises(ValueError):
+        PP.split_stages(stacked, 0)
+
+
+def test_stack_stages_is_contiguous_stage_view():
+    stacked = {"w": jnp.arange(8 * 3).reshape(8, 3)}
+    view = PP.stack_stages(stacked, 4)
+    assert view["w"].shape == (4, 2, 3)
+    for s, sub in enumerate(PP.split_stages(stacked, 4)):
+        np.testing.assert_array_equal(np.asarray(view["w"][s]),
+                                      np.asarray(sub["w"]))
+
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("pp,n_mb", [(2, 4), (4, 8)])
+def test_schedule_masks_cover_ticktable(sched, pp, n_mb):
+    """The dense mask arrays feed the jitted executor: one op max per
+    (clock, stage); F and B counts each equal n_mb per stage; total clock
+    span reproduces the analytic bubble."""
+    m = PP.schedule_masks(sched, n_mb, pp)
+    assert not (m["do_f"] & m["do_b"]).any()
+    assert (m["do_f"].sum(axis=0) == n_mb).all()
+    assert (m["do_b"].sum(axis=0) == n_mb).all()
+    busy = 2 * n_mb / m["ticks"]
+    assert busy == pytest.approx(1 - PP.bubble_fraction(n_mb, pp))
+
+
+def test_schedule_masks_rejects_unknown_schedule():
+    with pytest.raises(ValueError, match="pp_schedule"):
+        PP.schedule_masks("interleaved", 4, 2)
+
+
+def test_parallel_config_validates_pp():
+    from repro.configs import ParallelConfig
+    with pytest.raises(ValueError, match="pp_schedule"):
+        ParallelConfig(pp_schedule="pipedream")
+    with pytest.raises(ValueError, match="pp_stages"):
+        ParallelConfig(pp_stages=0)
+    with pytest.raises(ValueError, match="microbatches"):
+        ParallelConfig(microbatches=0)
+    assert ParallelConfig(pp_stages=4, pp_schedule="gpipe").pp_stages == 4
