@@ -71,26 +71,27 @@ def measure(mesh_spec: str = "4,2", steps: int = 5, d_model: int = 64,
     import jax.numpy as jnp
 
     from repro.configs import ParallelConfig, TrainConfig, reduced
-    from repro.launch.mesh import make_sim_mesh
+    from repro.parallel.plan import ParallelPlan
     from repro.train import init_state, make_train_step
 
-    mesh = make_sim_mesh(mesh_spec)
     cfg = reduced(get_config("mula-7b-a1b"), d_model=d_model)
     tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
                      grad_reduce_dtype="float32", lr_peak=1e-3, lr_min=1e-4,
                      warmup_steps=2, total_steps=steps + 1, seq_len=seq,
                      global_batch=batch)
-    rules = make_rules(cfg, mesh, kind="train", global_batch=batch)
     toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq + 1), 0,
                               cfg.vocab_size)
     b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
     dev0 = jax.devices()[0]
     out = {}
+    rules = None
     for mode in MEASURE_MODES:
-        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                           opt_sharding_mode=mode)
-        step_fn = make_train_step(cfg, ParallelConfig(), tc, rules=rules,
-                                  mesh=mesh, opt_sharding_mode=mode)
+        plan = ParallelPlan.from_legacy(mesh_spec, cfg=cfg,
+                                        opt_shard=mode).resolve(
+                                            cfg, global_batch=batch)
+        rules = plan.rules
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
+        step_fn = make_train_step(cfg, ParallelConfig(), tc, plan=plan)
         state, _ = step_fn(state, b)                    # compile + place
         jax.block_until_ready(jax.tree.leaves(state.opt.m)[0])
         placed = 0

@@ -117,9 +117,9 @@ def measure_pp(steps: int = 5, d_model: int = 64, layers: int = 4,
     import jax
 
     from repro.configs import ParallelConfig, TrainConfig, reduced
-    from repro.launch.mesh import make_sim_mesh
     from repro.parallel import pipeline as PP
-    from repro.parallel.sharding import batch_sharding, make_rules
+    from repro.parallel.plan import ParallelPlan
+    from repro.parallel.sharding import batch_sharding
     from repro.train import init_state, make_train_step
 
     cfg = reduced(get_config("mula-7b-a1b"), layers=layers, d_model=d_model)
@@ -132,14 +132,15 @@ def measure_pp(steps: int = 5, d_model: int = 64, layers: int = 4,
     host_batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
     points = []
     for pp, sched in PP_POINTS:
-        mesh = make_sim_mesh({1: "8", 2: "4,2,1", 4: "2,4,1"}[pp])
-        rules = make_rules(cfg, mesh, kind="train", global_batch=batch)
+        plan = ParallelPlan(dp=8 // pp, pp=pp, opt_shard="epso",
+                            pp_schedule=sched or "1f1b",
+                            microbatches=N_MB).resolve(cfg,
+                                                       global_batch=batch)
+        rules = plan.rules
         par = ParallelConfig(microbatches=N_MB, pp_stages=pp,
                              pp_schedule=sched or "1f1b")
-        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                           opt_sharding_mode="epso")
-        step_fn = make_train_step(cfg, par, tc, rules=rules, mesh=mesh,
-                                  opt_sharding_mode="epso")
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
+        step_fn = make_train_step(cfg, par, tc, plan=plan)
         b = jax.tree.map(lambda a: jax.device_put(a, batch_sharding(rules)),
                          host_batch)
         state, m = step_fn(state, b)                 # compile + place

@@ -99,26 +99,47 @@ class Checkpointer:
     stage axis too: a pp-stage-sharded layer stack is gathered into one
     stage-agnostic (L, ...) array on disk and resharded back onto its
     P('pp', ...) placement on restore, so checkpoints are portable across
-    pipeline layouts."""
+    pipeline layouts.
+
+    With a ``plan`` (a resolved ParallelPlan), its spec + axis layout are
+    serialized into each MANIFEST; ``restore`` then *refuses* to silently
+    reshard a checkpoint written under a different axis layout — it raises
+    a descriptive error unless the caller opts in with
+    ``on_plan_mismatch='reshard'`` (an explicit re-plan: the host arrays are
+    device_put onto the live plan's shardings)."""
 
     def __init__(self, root: str, *, interval: int = 1000,
-                 model_only_interval: int = 0, shardings=None):
+                 model_only_interval: int = 0, shardings=None,
+                 plan=None, on_plan_mismatch: str = "error"):
+        if on_plan_mismatch not in ("error", "reshard"):
+            raise ValueError("on_plan_mismatch must be 'error' or 'reshard',"
+                             f" got {on_plan_mismatch!r}")
         self.root = root
         self.interval = interval
         self.model_only_interval = model_only_interval or interval
         self.shardings = shardings       # state-shaped pytree or None
+        self.plan = plan                 # ResolvedPlan or None
+        self.on_plan_mismatch = on_plan_mismatch
         os.makedirs(root, exist_ok=True)
         self.slots = [os.path.join(root, "ckpt-1"),
                       os.path.join(root, "ckpt-2")]
 
     # ---- dual full checkpoints -------------------------------------------
-    def _slot_step(self, slot: str) -> int:
+    def _slot_manifest(self, slot: str):
         man = os.path.join(slot, "MANIFEST.json")
         if not os.path.exists(man):
-            return -1
+            return None
         try:
             with open(man) as f:
-                m = json.load(f)
+                return json.load(f)
+        except Exception:
+            return None
+
+    def _slot_step(self, slot: str) -> int:
+        m = self._slot_manifest(slot)
+        if m is None:
+            return -1
+        try:
             return int(m["step"]) if m.get("valid") else -1
         except Exception:
             return -1
@@ -142,9 +163,13 @@ class Checkpointer:
                 shutil.rmtree(slot)
             os.rename(tmp, slot)
             return slot
+        man = {"step": step, "valid": True, "time": time.time(),
+               "checksum": _checksum(flat)}
+        if self.plan is not None:
+            man["plan"] = {"spec": self.plan.spec(),
+                           "layout": self.plan.layout_signature()}
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-            json.dump({"step": step, "valid": True, "time": time.time(),
-                       "checksum": _checksum(flat)}, f)
+            json.dump(man, f)
         if os.path.exists(slot):
             shutil.rmtree(slot)
         os.rename(tmp, slot)
@@ -153,7 +178,12 @@ class Checkpointer:
     def restore(self, template, *, shardings=None):
         """Restore from the newest *valid* slot, resharding each leaf onto
         ``shardings`` (falling back to the instance default) when given.
-        Returns (state, step) or (None, -1)."""
+        Returns (state, step) or (None, -1).
+
+        When both the manifest and this Checkpointer carry a plan, their
+        axis layouts must agree — a mismatch raises instead of silently
+        resharding onto whatever the caller passed (set
+        ``on_plan_mismatch='reshard'`` to re-plan explicitly)."""
         best, best_step = None, -1
         for slot in self.slots:
             s = self._slot_step(slot)
@@ -161,11 +191,32 @@ class Checkpointer:
                 best, best_step = slot, s
         if best is None:
             return None, -1
+        self._check_plan(self._slot_manifest(best), best)
         state = load_pytree(template, os.path.join(best, "state.npz"))
         sh = shardings if shardings is not None else self.shardings
         if sh is not None:
             state = jax.tree.map(jax.device_put, state, sh)
         return state, best_step
+
+    def _check_plan(self, manifest, slot: str) -> None:
+        saved = (manifest or {}).get("plan")
+        if saved is None or self.plan is None:
+            return                       # legacy checkpoint or legacy caller
+        live = {"spec": self.plan.spec(),
+                "layout": self.plan.layout_signature()}
+        if saved["layout"] == live["layout"]:
+            return
+        if self.on_plan_mismatch == "reshard":
+            print(f"checkpoint {slot}: re-planning "
+                  f"'{saved.get('spec')}' -> '{live['spec']}' "
+                  f"(explicit on_plan_mismatch='reshard')")
+            return
+        raise ValueError(
+            f"checkpoint {slot} was written under plan "
+            f"'{saved.get('spec')}' (layout {saved['layout']}) but this run "
+            f"is planned as '{live['spec']}' (layout {live['layout']}); "
+            f"refusing to silently reshard — restart with the saved plan, "
+            f"or pass on_plan_mismatch='reshard' to re-plan explicitly")
 
     # ---- persistent model-only checkpoints --------------------------------
     def save_model_only(self, params, step: int):

@@ -47,6 +47,18 @@ def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def stage45_backend(moe_cfg) -> str:
+    """Stage-4/5 (grouped FFN + combine) backend. The active KernelPlan
+    wins when it names a concrete backend ('xla' | 'pallas'); under its
+    'ref' default the per-config ``kernel_backend`` knob decides — so a
+    plan can retarget the kernels without touching the model config."""
+    from repro.parallel.plan import current_kernel_plan
+    kp = current_kernel_plan()
+    if kp.backend != "ref":
+        return kp.moe_backend
+    return moe_cfg.kernel_backend
+
+
 # ----------------------------------------------------------------------------
 # params
 # ----------------------------------------------------------------------------
@@ -301,11 +313,18 @@ def moe_dense_capacity(p, x, moe_cfg, backend: str = "xla", constrain=None,
 # ----------------------------------------------------------------------------
 
 def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
-                 batch_axes=("data",)):
+                 batch_axes=("data",), tp_axis=None):
     """Paper Algorithm 1 under EP. Tokens x: (N, d) sharded over
     (batch_axes..., ep_axis) on dim 0; expert weights sharded over ep_axis on
     the stacked expert dim. The body is fully manual so the dispatch sort
     stays local to each (pod, data) group (no cross-DP communication).
+
+    ``tp_axis`` composes expert-TP on top of EP (the ParallelPlan ep x tp
+    mesh): each expert's d_ff is additionally sharded over ``tp_axis``
+    (gate/up column-sharded, down row-sharded), every tp rank runs the same
+    dispatch on replicated tokens, and the partial expert outputs are
+    psum'd over ``tp_axis`` before the Stage-5 reduce-scatter — one extra
+    all-reduce per MoE layer, like a Megatron MLP.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -313,6 +332,15 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
     ep = mesh.shape[ep_axis]
     assert E % ep == 0, f"{E} experts not divisible by EP={ep}"
     EL = E // ep
+    if tp_axis is not None and tp_axis not in mesh.shape:
+        raise ValueError(
+            f"tp_axis {tp_axis!r} is not a mesh axis "
+            f"(mesh has {tuple(mesh.shape)}): expert-TP needs a real axis — "
+            f"drop tp_axis for plain EP, or add the axis to the plan")
+    if tp_axis is not None and moe_cfg.d_ff_expert % mesh.shape[tp_axis]:
+        raise ValueError(
+            f"expert d_ff={moe_cfg.d_ff_expert} not divisible by "
+            f"tp={mesh.shape[tp_axis]} (axis {tp_axis!r})")
     # manual over ALL mesh axes: leaving an axis (e.g. 'pod') auto at the
     # shard_map boundary trips an XLA SPMD repartitioning bug ("Invalid
     # binary instruction opcode copy") on multi-pod meshes.
@@ -322,6 +350,10 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
 
     def body(router_w, gate, up, down, xl):
         if moe_cfg.stage1 == "a2a":
+            if tp_axis is not None:
+                raise NotImplementedError(
+                    "stage1='a2a' does not compose with expert-TP yet; use "
+                    "the allgather Stage 1 for ep x tp plans")
             return _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg,
                                    ep_axis=ep_axis, ep=ep, manual=manual)
         # Router on local tokens (router replicated — paper §3.1).
@@ -333,12 +365,16 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
         w_g = jax.lax.all_gather(r.weights, ep_axis, tiled=True)
         i_g = jax.lax.all_gather(r.indices, ep_axis, tiled=True)
         r_g = RouterOut(w_g, i_g, r.aux_loss, r.z_loss)
-        # ---- Stages 2-5 on the local expert slice ------------------------
+        # ---- Stages 2-5 on the local expert (and d_ff) slice -------------
         rank = jax.lax.axis_index(ep_axis)
         out_partial, plan = dispatch_compute_combine(
             gate, up, down, x_g, r_g, moe_cfg,
             expert_offset=rank * EL, local_experts=EL,
-            backend=moe_cfg.kernel_backend)
+            backend=stage45_backend(moe_cfg))
+        if tp_axis is not None:
+            # expert-TP: sum the per-d_ff-shard partial outputs (the combine
+            # is linear in the expert rows, so summing after it is exact)
+            out_partial = jax.lax.psum(out_partial, tp_axis)
         # ---- Stage 5 tail: reduce-scatter to local tokens ----------------
         out_local = jax.lax.psum_scatter(out_partial, ep_axis,
                                          scatter_dimension=0, tiled=True)
@@ -354,8 +390,8 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
 
     out, aux, z, drops = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(ep_axis, None, None), P(ep_axis, None, None),
-                  P(ep_axis, None, None), token_spec),
+        in_specs=(P(), P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
+                  P(ep_axis, tp_axis, None), token_spec),
         out_specs=(token_spec, P(), P(), P()),
         axis_names=manual)(
             p["router"], p["gate"], p["up"], p["down"], x)
@@ -431,7 +467,7 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
         moe_cfg.capacity_factor * T_loc * K)), 8)
     out_rows, _ = dispatch_compute_combine(
         gate, up, down, recv_x, r2, inner_cfg, expert_offset=0,
-        local_experts=EL, backend=moe_cfg.kernel_backend,
+        local_experts=EL, backend=stage45_backend(moe_cfg),
         pool_rows=inner_pool)
 
     # --- reverse all-to-all + per-token sum over K slots ------------------
@@ -506,8 +542,9 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
 
 def sparse_moe_block(p, x, cfg, *, mesh=None, ep_axis: str = "model",
                      batch_axes=("data",), constrain=None, c_align: int = 1,
-                     tp_mesh=None):
-    """x: (B, S, d) -> (out (B,S,d), aux_loss, z_loss)."""
+                     tp_mesh=None, tp_axis=None):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss, z_loss). ``tp_axis`` (a plan
+    mesh's dedicated TP axis) composes expert-TP with the EP shard_map."""
     B, S, d = x.shape
     m = cfg.moe
     xt = x.reshape(B * S, d)
@@ -519,13 +556,14 @@ def sparse_moe_block(p, x, cfg, *, mesh=None, ep_axis: str = "model",
               and m.num_experts % mesh.shape[ep_axis] == 0)
     if use_ep:
         out, r, _drops = moe_fsmoe_ep(p, xt, m, mesh=mesh, ep_axis=ep_axis,
-                                      batch_axes=batch_axes)
+                                      batch_axes=batch_axes, tp_axis=tp_axis)
         return out.reshape(B, S, d), r.aux_loss, r.z_loss
     if m.etp_shard_map and tp_mesh is not None:
         out, r = moe_etp_shard_map(p, xt, m, mesh=tp_mesh,
+                                   tp_axis=tp_axis or "model",
                                    batch_axes=batch_axes)
         return out.reshape(B, S, d), r.aux_loss, r.z_loss
-    backend = m.kernel_backend if m.moe_impl == "fsmoe" else "xla"
+    backend = stage45_backend(m) if m.moe_impl == "fsmoe" else "xla"
     out, r = moe_dense_capacity(p, xt, m, backend=backend,
                                 constrain=constrain, c_align=c_align)
     return out.reshape(B, S, d), r.aux_loss, r.z_loss

@@ -7,33 +7,83 @@
 * ``fused_swiglu(gate, up)``      — fused activation; analytic VJP.
 * ``token_counts(idx, n, off)``   — Stage 2 histogram (no gradient).
 
-``KERNEL_CONFIG`` holds the TPU tile sizes (MXU-aligned 128/512 defaults)
-and the interpret flag (True on CPU: kernels execute their Python bodies —
-how this container validates TPU kernels). Wrappers pad K/N dims up to tile
-multiples (zero-padding is exact for matmul) and slice back.
+Tile sizes (MXU-aligned 128/512 defaults) and the interpret flag (True on
+CPU: kernels execute their Python bodies — how this container validates TPU
+kernels) come from the *active* ``parallel.plan.KernelPlan`` — plan-scoped
+via ``use_kernel_plan`` (leak-free), read at trace time. ``KERNEL_CONFIG``
+remains as a thin deprecated dict-view of the process-default plan.
+Wrappers pad K/N dims up to tile multiples (zero-padding is exact for
+matmul) and slice back.
 """
 from __future__ import annotations
 
+import dataclasses
+from collections.abc import MutableMapping
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel.plan import (KernelPlan, current_kernel_plan,
+                                 default_kernel_plan,
+                                 set_default_kernel_plan, use_kernel_plan)
 
 from .gmm import gmm_pallas, tgmm_pallas
 from .combine import combine_fwd_pallas, combine_bwd_pallas
 from .swiglu import swiglu_pallas
 from .moe_dispatch import token_counts_pallas
 
-KERNEL_CONFIG = {
-    "tile_m": 128,      # rows per m-tile — dispatch aligns groups to this
-    "tile_k": 512,
-    "tile_n": 512,
-    "interpret": None,  # None -> auto (True on CPU)
-}
+__all__ = ["KernelPlan", "current_kernel_plan", "default_kernel_plan",
+           "set_default_kernel_plan", "use_kernel_plan", "KERNEL_CONFIG",
+           "gmm", "combine", "fused_swiglu", "token_counts",
+           "flash_attention", "gmm_align", "ssd_intra_chunk"]
+
+
+class _KernelConfigAlias(MutableMapping):
+    """DEPRECATED view of the process-default :class:`KernelPlan`.
+
+    Kept so legacy call sites (``ops.KERNEL_CONFIG['tile_m'] = 8`` and the
+    save/restore idiom ``old = dict(KERNEL_CONFIG); ...; update(old)``)
+    still work. Both reads and writes go to the process *default* plan —
+    never the scoped-active one — so the idiom stays round-trip-safe even
+    when executed inside a ``use_kernel_plan`` scope. New code should scope
+    a plan instead::
+
+        with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
+                                                 tile_m=8)):
+            ...
+    """
+    _KEYS = ("tile_m", "tile_k", "tile_n", "interpret")
+
+    def __getitem__(self, k):
+        if k not in self._KEYS:
+            raise KeyError(k)
+        return getattr(default_kernel_plan(), k)
+
+    def __setitem__(self, k, v):
+        if k not in self._KEYS:
+            raise KeyError(k)
+        set_default_kernel_plan(
+            dataclasses.replace(default_kernel_plan(), **{k: v}))
+
+    def __delitem__(self, k):
+        raise TypeError("KERNEL_CONFIG keys are fixed")
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self):
+        return len(self._KEYS)
+
+    def __repr__(self):
+        return f"KERNEL_CONFIG(deprecated -> {default_kernel_plan()!r})"
+
+
+KERNEL_CONFIG = _KernelConfigAlias()
 
 
 def _interpret() -> bool:
-    flag = KERNEL_CONFIG["interpret"]
+    flag = current_kernel_plan().interpret
     if flag is None:
         return jax.default_backend() == "cpu"
     return bool(flag)
@@ -41,7 +91,7 @@ def _interpret() -> bool:
 
 def gmm_align() -> int:
     """Group alignment the dispatch must honor for the Pallas backend."""
-    return KERNEL_CONFIG["tile_m"]
+    return current_kernel_plan().tile_m
 
 
 def _pad_to(x, mult, axis):
@@ -74,8 +124,8 @@ def gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
 
 
 def _gmm_fwd_impl(x, w, group_sizes):
-    tm, tk, tn = (KERNEL_CONFIG["tile_m"], KERNEL_CONFIG["tile_k"],
-                  KERNEL_CONFIG["tile_n"])
+    kp = current_kernel_plan()
+    tm, tk, tn = kp.tile_m, kp.tile_k, kp.tile_n
     M, K = x.shape
     G, _, N = w.shape
     tk = min(tk, K)
@@ -98,8 +148,8 @@ def _gmm_fwd(x, w, group_sizes):
 
 def _gmm_bwd(res, dy):
     x, w, group_sizes = res
-    tm, tk, tn = (KERNEL_CONFIG["tile_m"], KERNEL_CONFIG["tile_k"],
-                  KERNEL_CONFIG["tile_n"])
+    kp = current_kernel_plan()
+    tm, tk, tn = kp.tile_m, kp.tile_k, kp.tile_n
     M, K = x.shape
     G, _, N = w.shape
     # dx = gmm(dy, w^T)

@@ -14,6 +14,13 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
     PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+
+Plan resolution (no compile — shape-only; the CI smoke step):
+    PYTHONPATH=src python -m repro.launch.dryrun --parallel dp=2,pp=2,ep=2 \
+        --arch mula-7b-a1b
+prints the resolved ParallelPlan: mesh axes, batch placement, the
+per-parameter PartitionSpec table (param + optimizer state) and projected
+bytes/device.
 """
 import argparse
 import dataclasses
@@ -176,10 +183,30 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
     return rec
 
 
+def print_parallel_plan(spec: str, arch: str, *, global_batch: int = 256,
+                        train_cfg=None) -> str:
+    """Resolve a --parallel spec against ``arch`` and print the plan:
+    axes, per-param placement, projected bytes/device. Shape-only
+    (jax.eval_shape) — no allocation, no compile; safe as a CI smoke."""
+    from repro.parallel.plan import ParallelPlan
+    cfg = get_config(arch)
+    plan = ParallelPlan.parse(spec).resolve(cfg, train_cfg,
+                                            global_batch=global_batch)
+    text = plan.describe(cfg)
+    print(f"== resolved plan for {arch} (global_batch={global_batch}) ==")
+    print(text)
+    return text
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
+    ap.add_argument("--parallel", default=None,
+                    help="resolve a ParallelPlan spec (e.g. 'dp=2,pp=2,"
+                         "ep=2') against --arch and print axes, per-param "
+                         "placement and projected bytes/device; no compile")
+    ap.add_argument("--global-batch", type=int, default=256)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
@@ -193,6 +220,11 @@ def main():
                          '\'{"etp_shard_map": true}\'')
     args = ap.parse_args()
     moe_opts = json.loads(args.moe_opts) if args.moe_opts else None
+
+    if args.parallel:
+        print_parallel_plan(args.parallel, args.arch or "mula-7b-a1b",
+                            global_batch=args.global_batch)
+        return
 
     records, failures = [], []
     if args.all:

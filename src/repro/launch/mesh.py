@@ -73,10 +73,12 @@ def forced_device_env(n: int, env=None) -> dict:
     return env
 
 
-def make_sim_mesh(spec):
-    """Mesh from a CLI spec ('4,2') over forced CPU host devices. Raises with
-    the exact XLA_FLAGS fix if the backend came up with too few devices."""
-    shape, axes = parse_mesh_spec(spec)
+def make_forced_mesh(shape, axes, *, what: str = None):
+    """Mesh over forced CPU host devices — the one shared constructor behind
+    the legacy ``--mesh`` path (make_sim_mesh) and ``ParallelPlan.resolve``,
+    so the forced-device contract and its error message can never diverge
+    between the two. Raises with the exact XLA_FLAGS fix if the backend
+    came up with too few devices."""
     n = 1
     for d in shape:
         n *= d
@@ -84,7 +86,14 @@ def make_sim_mesh(spec):
     ndev = len(jax.devices())
     if ndev < n:
         raise RuntimeError(
-            f"mesh {spec} needs {n} devices but jax sees {ndev}; the backend "
-            f"initialized before the mesh request — launch with "
-            f"XLA_FLAGS='{_FORCE_FLAG}={n}' in the environment")
+            f"{what or f'mesh {tuple(shape)}'} needs {n} devices but jax "
+            f"sees {ndev}; the backend initialized before the mesh request "
+            f"— launch with XLA_FLAGS='{_FORCE_FLAG}={n}' in the "
+            f"environment")
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_sim_mesh(spec):
+    """Mesh from a CLI spec ('4,2') over forced CPU host devices."""
+    shape, axes = parse_mesh_spec(spec)
+    return make_forced_mesh(shape, axes, what=f"mesh {spec}")

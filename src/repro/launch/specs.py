@@ -104,7 +104,12 @@ def cache_specs(cache_shapes, cfg: ModelConfig,
 
 def state_specs(cfg: ModelConfig, train: TrainConfig, rules: ShardingRules,
                 opt_mode: str = "epso"):
-    """Sharded ShapeDtypeStruct TrainState (zero allocation)."""
+    """Sharded ShapeDtypeStruct TrainState (zero allocation). ``rules`` may
+    be a ShardingRules or a resolved ParallelPlan (which also supplies the
+    optimizer-sharding mode)."""
+    if hasattr(rules, "rules"):          # a ResolvedPlan
+        opt_mode = rules.opt_shard
+        rules = rules.rules
     shapes = jax.eval_shape(
         lambda: init_state(jax.random.PRNGKey(0), cfg, train))
     pshard = shardings(shapes.params, rules)

@@ -16,13 +16,21 @@ injected hard node failure at step 12 via buffer-node swap + restore):
   PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
       --mesh 4,2 --opt-shard epso --steps 20 --inject-hard-at 12
 
-Usage (3D (data, pp, model) mesh: 2-way DP x 2 pipeline stages x 2-way EP,
-jitted 1f1b schedule composed with EPSO + fault tolerance):
+Usage (declarative plan: 2-way DP x 2 pipeline stages x 2-way EP, jitted
+1f1b schedule composed with EPSO + fault tolerance):
   PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
-      --mesh 2,2,2 --opt-shard epso --pp-schedule 1f1b --steps 20
+      --parallel dp=2,pp=2,ep=2 --opt-shard epso --steps 20
 
-The ``--mesh`` path forces the product of the axis sizes as CPU host devices
-through XLA_FLAGS when the backend allows it (see launch/mesh.make_sim_mesh).
+Usage (expert-TP: EP and TP as *distinct* axes — each expert's d_ff sharded
+2-way on top of 2-way expert parallelism; inexpressible with --mesh):
+  PYTHONPATH=src python -m repro.launch.train --arch mula-7b-a1b --scale smoke \
+      --parallel dp=2,ep=2,tp=2 --steps 10
+
+The legacy ``--mesh dp[,pp][,model]`` spec still works: it is translated to
+a ParallelPlan via ``ParallelPlan.from_legacy`` (the old role inference on
+the 'model' axis — EP when the expert count divides it, TP otherwise).
+Both paths force the plan's device product as CPU host devices through
+XLA_FLAGS when the backend allows it (see launch/mesh, parallel/plan).
 """
 from __future__ import annotations
 
@@ -41,8 +49,8 @@ from repro.data import ByteTokenizer, ShardedDataLoader, preprocess_corpus
 from repro.checkpoint import Checkpointer
 from repro.ft import (ClusterManager, NaNMonitor, NodeFailure,
                       run_with_failure_handling)
-from repro.launch.mesh import make_sim_mesh
-from repro.parallel.sharding import batch_sharding, make_rules
+from repro.parallel.plan import ParallelPlan
+from repro.parallel.sharding import batch_sharding
 from repro.train import init_state, make_train_step, train_state_shardings
 from repro.models import padded_vocab
 
@@ -94,34 +102,25 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         microbatches: int = 1, sac: str = "block", seed: int = 0,
         log_every: int = 10, d_model: int = 256, layers: int = 2,
         d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
-        opt_shard: str = "none", pp_schedule: str = "1f1b",
+        parallel: str = None,
+        opt_shard: str = None, pp_schedule: str = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
-    if opt_shard != "none" and not mesh:
-        raise ValueError(f"--opt-shard {opt_shard} needs --mesh: optimizer-"
-                         f"state sharding is a placement over mesh axes")
+    # opt_shard/pp_schedule: None = not passed (the --parallel spec's opt=/
+    # schedule= options apply); an explicit value — including the defaults
+    # 'none'/'1f1b' — overrides the spec.
+    if opt_shard not in (None, "none") and not (mesh or parallel):
+        raise ValueError(f"--opt-shard {opt_shard} needs --parallel (or the "
+                         f"legacy --mesh): optimizer-state sharding is a "
+                         f"placement over mesh axes")
+    if mesh and parallel:
+        raise ValueError("--mesh and --parallel are mutually exclusive "
+                         "(--mesh is the legacy spelling of --parallel)")
     os.makedirs(out, exist_ok=True)
-    # mesh first: make_sim_mesh must run before anything initializes the JAX
-    # backend, or the forced host-device count cannot take effect.
-    mesh_obj = make_sim_mesh(mesh) if mesh else None
-    # a 'pp' mesh axis of size > 1 turns on the jitted 1f1b/gpipe pipeline:
-    # pp_stages is the axis size; microbatches become pipeline microbatches.
-    pp_stages = int(mesh_obj.shape.get("pp", 1)) if mesh_obj is not None else 1
-    if pp_stages > 1 and microbatches == 1:
-        # only the untouched default is bumped; an explicit --microbatches
-        # is honored as-is (any value >= 1 pipelines, just with more bubble).
-        # The default must divide the batch — prefer 2*pp, fall back to pp.
-        for cand in (2 * pp_stages, pp_stages):
-            if batch % cand == 0:
-                microbatches = cand
-                print(f"pp={pp_stages}: pipeline microbatches defaulted to "
-                      f"{microbatches}")
-                break
-    if pp_stages > 1 and batch % microbatches != 0:
-        raise ValueError(f"--batch {batch} must divide into --microbatches "
-                         f"{microbatches} pipeline microbatches")
 
+    # cfg is pure python — build it before the plan resolves (the resolve
+    # forces host devices, which must precede JAX backend initialization)
     cfg = get_config(arch)
     if scale == "smoke":
         cfg = reduced(cfg, layers=layers, d_model=d_model,
@@ -136,6 +135,50 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             forced_uniform_routing=fur,
             d_ff_expert=moe_dff or cfg.moe.d_ff_expert))
 
+    # ---- the ParallelPlan: --parallel spec, or the legacy --mesh shim ----
+    if parallel:
+        pplan = ParallelPlan.parse(parallel)
+        if opt_shard is not None:               # CLI flag overrides the spec
+            pplan = dataclasses.replace(pplan, opt_shard=opt_shard)
+        if pp_schedule is not None:
+            pplan = dataclasses.replace(pplan, pp_schedule=pp_schedule)
+    elif mesh:
+        pplan = ParallelPlan.from_legacy(mesh, cfg=cfg,
+                                         opt_shard=opt_shard or "none",
+                                         pp_schedule=pp_schedule or "1f1b")
+    else:
+        pplan = None
+    opt_shard = pplan.opt_shard if pplan is not None else (opt_shard
+                                                           or "none")
+
+    # a pp plan axis > 1 turns on the jitted 1f1b/gpipe pipeline:
+    # microbatches become pipeline microbatches.
+    pp_stages = pplan.pp if pplan is not None else 1
+    if microbatches == 1 and pplan is not None and pplan.microbatches > 1:
+        microbatches = pplan.microbatches       # spec-supplied mb=
+    if pp_stages > 1 and microbatches == 1:
+        # only the untouched default is bumped; an explicit --microbatches
+        # is honored as-is (any value >= 1 pipelines, just with more bubble).
+        # The default must divide the batch — prefer 2*pp, fall back to pp.
+        for cand in (2 * pp_stages, pp_stages):
+            if batch % cand == 0:
+                microbatches = cand
+                print(f"pp={pp_stages}: pipeline microbatches defaulted to "
+                      f"{microbatches}")
+                break
+    if pp_stages > 1 and batch % microbatches != 0:
+        raise ValueError(f"--batch {batch} must divide into --microbatches "
+                         f"{microbatches} pipeline microbatches")
+    if pplan is not None:
+        pplan = dataclasses.replace(pplan, microbatches=microbatches)
+    pp_schedule = pplan.pp_schedule if pplan is not None \
+        else (pp_schedule or "1f1b")
+
+    # resolve once: builds the mesh (forcing host devices first) + rules
+    plan = pplan.resolve(cfg, global_batch=batch) if pplan is not None \
+        else None
+    rules = plan.rules if plan is not None else None
+
     data_dir = prepare_data(out, context=seq, seed=seed)
     loader = ShardedDataLoader(data_dir, global_batch=batch)
 
@@ -145,16 +188,14 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                         total_steps=steps, seq_len=seq, global_batch=batch,
                         seed=seed)
     par = ParallelConfig(microbatches=microbatches, remat_policy=sac,
+                         optimizer_sharding=opt_shard,
                          pp_stages=pp_stages, pp_schedule=pp_schedule)
 
-    rules = make_rules(cfg, mesh_obj, kind="train",
-                       global_batch=batch) if mesh_obj is not None else None
-    state = init_state(jax.random.PRNGKey(seed), cfg, train, rules=rules,
+    state = init_state(jax.random.PRNGKey(seed), cfg, train, plan=plan,
                        opt_sharding_mode=opt_shard)
     state_sh = train_state_shardings(state.params, rules, opt_shard)
-    if rules is not None:
-        step_fn = make_train_step(cfg, par, train, rules=rules, mesh=mesh_obj,
-                                  opt_sharding_mode=opt_shard,
+    if plan is not None and plan.mesh is not None:
+        step_fn = make_train_step(cfg, par, train, plan=plan,
                                   state_shardings=state_sh)
     else:
         step_fn = jax.jit(make_train_step(cfg, par, train))
@@ -172,7 +213,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         ckpt_interval = max(1, steps // 4)
         print(f"injection requested: ckpt interval clamped to {ckpt_interval}")
     ckpt = Checkpointer(os.path.join(out, "ckpt"), interval=ckpt_interval,
-                        shardings=state_sh)
+                        shardings=state_sh, plan=plan)
     n_nodes = max(2, len(jax.devices()))
     cluster = ClusterManager(n_active=n_nodes, n_buffer=n_buffer)
 
@@ -190,7 +231,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
 
     nparams = sum(l.size for l in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={nparams/1e6:.1f}M "
-          f"vocab={padded_vocab(cfg)} mesh={mesh or 'single'} "
+          f"vocab={padded_vocab(cfg)} "
+          f"plan={pplan if pplan is not None else 'single'} "
           f"opt_shard={opt_shard} pp={pp_stages}"
           + (f":{pp_schedule}" if pp_stages > 1 else ""))
 
@@ -250,6 +292,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     with open(os.path.join(out, "history.json"), "w") as f:
         json.dump(list(result), f)
     summary = {"arch": cfg.name, "steps": end_step, "mesh": mesh,
+               "parallel": str(pplan) if pplan is not None else None,
                "opt_shard": opt_shard, "pp_stages": pp_stages,
                "pp_schedule": pp_schedule if pp_stages > 1 else None,
                "relaunches": relaunches,
@@ -281,18 +324,28 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-interval", type=int, default=50)
-    ap.add_argument("--mesh", default=None,
-                    help="simulated device mesh: '4,2' = (data, model), "
-                         "'2,2,2' = (data, pp, model); forces that many CPU "
-                         "host devices; a pp axis > 1 enables the jitted "
+    ap.add_argument("--parallel", default=None,
+                    help="declarative ParallelPlan spec, e.g. "
+                         "'dp=2,pp=2,ep=2' or 'dp=2,ep=2,tp=2' (expert-TP); "
+                         "axes: dp, pp, ep, tp, pod; options: opt=, "
+                         "schedule=, mb=, fsdp. Forces the device product "
+                         "as CPU host devices; pp>1 enables the jitted "
                          "pipeline schedule")
-    ap.add_argument("--opt-shard", default="none",
+    ap.add_argument("--mesh", default=None,
+                    help="LEGACY simulated device mesh: '4,2' = (data, "
+                         "model), '2,2,2' = (data, pp, model); translated "
+                         "to a ParallelPlan (MoE: model axis -> ep when "
+                         "divisible, else tp). Prefer --parallel")
+    ap.add_argument("--opt-shard", default=None,
                     choices=["none", "so", "epso"],
-                    help="optimizer-state sharding (paper §3.2)")
-    ap.add_argument("--pp-schedule", default="1f1b",
+                    help="optimizer-state sharding (paper §3.2); overrides "
+                         "a --parallel spec's opt= option (unset = spec "
+                         "decides, default none)")
+    ap.add_argument("--pp-schedule", default=None,
                     choices=["gpipe", "1f1b"],
-                    help="pipeline microbatch schedule when the mesh has a "
-                         "pp axis (paper §2.2: Mula-100B/220B train 1f1b)")
+                    help="pipeline microbatch schedule when the plan has a "
+                         "pp axis (paper §2.2: Mula-100B/220B train 1f1b); "
+                         "overrides a --parallel spec's schedule= option")
     ap.add_argument("--n-buffer", type=int, default=2,
                     help="buffer nodes for hard-failure replacement")
     ap.add_argument("--inject-hard-at", type=int, default=None,
@@ -307,6 +360,7 @@ def main():
         fur=args.fur, microbatches=args.microbatches, sac=args.sac,
         d_model=args.d_model, layers=args.layers, seed=args.seed,
         ckpt_interval=args.ckpt_interval, mesh=args.mesh,
+        parallel=args.parallel,
         opt_shard=args.opt_shard, pp_schedule=args.pp_schedule,
         n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,

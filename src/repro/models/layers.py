@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.kernels.ref import slot_decode_attention_ref
+from repro.parallel.plan import current_kernel_plan, scoped_kernel_plan
 
 Constrain = Callable[[jax.Array, str], jax.Array]  # (x, logical_spec_name)
 
@@ -25,10 +26,30 @@ Constrain = Callable[[jax.Array, str], jax.Array]  # (x, logical_spec_name)
 # while bodies once) is exact. None = use the q_block/kv_block arguments.
 ATTN_BLOCK_OVERRIDE = None
 
-# Attention implementation: 'blockwise' (pure-JAX online-softmax; has a
+
+# The attention implementation — 'blockwise' (pure-JAX online-softmax; has a
 # backward, used for training) | 'pallas' (repro/kernels/flash_attention.py,
-# forward-only — serving/prefill on TPU; interpret mode on CPU).
-ATTN_IMPL = "blockwise"
+# forward-only — serving/prefill on TPU; interpret mode on CPU) — is the
+# active KernelPlan's ``attn_impl`` (plan-scoped; no module-global state).
+# ``layers.ATTN_IMPL`` survives as a deprecated alias: reads resolve to the
+# active plan, and a legacy assignment (``layers.ATTN_IMPL = 'pallas'``)
+# lands in the module dict where ``_attn_impl`` honors it — the old
+# behavior, never a silent no-op. Precedence: an explicitly scoped plan
+# (``use_kernel_plan``, e.g. a plan-built train step's trace) > the legacy
+# module global > the process-default plan — a stale legacy assignment can
+# never override a plan someone scoped on purpose.
+def __getattr__(name: str):
+    if name == "ATTN_IMPL":
+        return current_kernel_plan().attn_impl
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _attn_impl() -> str:
+    scoped = scoped_kernel_plan()
+    if scoped is not None:
+        return scoped.attn_impl
+    legacy = globals().get("ATTN_IMPL")
+    return legacy if legacy is not None else current_kernel_plan().attn_impl
 
 
 def no_constrain(x, _name):
@@ -191,7 +212,7 @@ def attention(params, x, cfg, *, constrain: Constrain = no_constrain,
     if memory is None:  # RoPE only for self-attention
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    if ATTN_IMPL == "pallas":
+    if _attn_impl() == "pallas":
         from repro.kernels.ops import flash_attention
         o = flash_attention(q, k, v, causal=(causal and memory is None),
                             window=cfg.sliding_window if memory is None else 0,

@@ -162,20 +162,25 @@ def _dense_block(lp, h, cfg, rules, sac: str, causal=True):
 
 def _moe_block(lp, h, cfg, rules, sac: str, mesh):
     cons = rules.constrain if rules else (lambda x, n: x)
+    ep_axis = rules.ep_axis if rules else None
+    tp_axis = rules.tp_axis if rules else None
+    # token/batch axes for the MoE dispatch exclude the EP axis itself
+    # (tokens reshard over it inside the block)
     batch_axes = tuple(a for a in (rules.batch_axes if rules else ())
-                       if a != "model")
-    # EP shard_map path only when the rules assign the model axis to EP;
-    # under 'etp'/'tp' roles the capacity path auto-shards instead.
-    mesh_eff = mesh if (rules is not None and rules.ep_axis) else None
+                       if a != ep_axis)
+    # EP shard_map path only when the rules assign an EP axis; under
+    # 'etp'/'tp'-only placements the capacity path auto-shards instead.
+    mesh_eff = mesh if ep_axis else None
     attn = _sac(lambda q, x: L.attention(q, x, cfg, constrain=cons),
                 "attn", sac)
     c_align = 1
     if rules is not None and rules.mesh is not None and rules.batch_axes:
         c_align = rules._axis_size(tuple(rules.batch_axes))
-    tp_mesh = mesh if (rules is not None and rules.tp_axis) else None
+    tp_mesh = mesh if tp_axis else None
     moe = _sac(lambda q, x: moe_lib.sparse_moe_block(
-        q, x, cfg, mesh=mesh_eff, batch_axes=batch_axes, constrain=cons,
-        c_align=c_align, tp_mesh=tp_mesh), "moe", sac)
+        q, x, cfg, mesh=mesh_eff, ep_axis=ep_axis or "model",
+        batch_axes=batch_axes, constrain=cons,
+        c_align=c_align, tp_mesh=tp_mesh, tp_axis=tp_axis), "moe", sac)
     h = h + attn(lp["attn"], L.apply_norm(lp["ln1"], h, cfg.norm))
     mo, aux, z = moe(lp["moe"], L.apply_norm(lp["ln2"], h, cfg.norm))
     h = h + mo

@@ -70,6 +70,9 @@ def optimizer_state_specs(params, rules: ShardingRules, mode: str = "epso"):
         return jax.tree.map(lambda _: P(), params)
     mesh = rules.mesh
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    # the model-like axes: the legacy shared 'model' axis, or the plan
+    # mesh's dedicated 'ep'/'tp' axes — EPSO treats them uniformly.
+    model_axes = tuple(a for a in ("model", "ep", "tp") if a in mesh.shape)
     pspecs = param_specs(params, rules)
 
     def one(spec: P, leaf):
@@ -77,11 +80,11 @@ def optimizer_state_specs(params, rules: ShardingRules, mode: str = "epso"):
         if mode == "so":
             groups = [dp_axes]
         elif mode == "epso":
-            # one joint group: DP axes + the model axis where the param is
-            # replicated over it; _augment skips axes already used by the
-            # param spec (model-sharded experts keep their sharding and gain
-            # DP on another dim).
-            groups = [dp_axes + (("model",) if "model" in mesh.shape else ())]
+            # one joint group: DP axes + the model-like axes where the param
+            # is replicated over them; _augment skips axes already used by
+            # the param spec (model-sharded experts keep their sharding and
+            # gain DP on another dim).
+            groups = [dp_axes + model_axes]
         elif mode == "none":
             return spec
         else:

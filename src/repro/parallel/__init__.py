@@ -1,0 +1,10 @@
+"""Parallelism substrate: the declarative ParallelPlan API (plan.py), the
+sharding-rule engine (sharding.py) and the jitted pipeline executor
+(pipeline.py)."""
+from .plan import (AXES, KernelPlan, ParallelPlan, ResolvedPlan,
+                   current_kernel_plan, default_kernel_plan,
+                   set_default_kernel_plan, use_kernel_plan)
+
+__all__ = ["AXES", "KernelPlan", "ParallelPlan", "ResolvedPlan",
+           "current_kernel_plan", "default_kernel_plan",
+           "set_default_kernel_plan", "use_kernel_plan"]

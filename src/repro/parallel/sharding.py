@@ -1,22 +1,25 @@
-"""Per-architecture sharding rules for the ('data','model') /
-('pod','data','model') production mesh (DESIGN §7).
+"""Per-architecture sharding rules over named mesh axes.
 
-Roles of the 'model' axis:
-  * 'tp'  — Megatron tensor parallelism (dense/ssm/audio/vlm archs):
-            column-parallel wq/wk/wv + up/gate, row-parallel wo/down,
-            vocab-sharded embedding when divisible.
-  * 'ep'  — paper-faithful expert parallelism (MoE training): tokens sharded
-            over (pod, data, model); non-expert params replicated over
-            'model'; expert stacks sharded over 'model' (paper §1 EP).
-  * 'etp' — expert tensor parallelism: experts' d_ff sharded over 'model'
-            (used when num_experts doesn't divide the model-axis size, e.g.
-            mixtral 8e on a 16-way axis, and for inference shapes where the
-            batch is too small to span data×model).
+Two mesh vocabularies feed the same ``ShardingRules`` engine:
+
+* the legacy ('data','model') / ('pod','data','model') production mesh,
+  where ``make_rules`` infers the 'model' axis's role per (arch, kind):
+  'tp' (Megatron TP), 'ep' (paper §1 expert parallelism) or 'etp' (experts'
+  d_ff sharded — the fallback when num_experts doesn't divide the axis);
+* the ParallelPlan mesh (parallel/plan.py), where every axis is explicit —
+  'data'/'pod' (DP), 'pp' (pipeline stages), and *separate* 'ep' and 'tp'
+  axes. ``tp_axis`` and ``ep_axis`` may both be set: expert stacks shard
+  over ep on the stacked-expert dim AND over tp on their d_ff dim
+  (expert-TP — the Mula-100B/220B mesh shape role inference on one shared
+  'model' axis could not express).
+
+Whatever the vocabulary, tp_axis/ep_axis hold mesh-axis *names*; everything
+below pattern-matches on those, so 'model' and 'ep'/'tp' behave identically.
 
 Optimizer-state sharding (paper §3.2):
   * 'so'   — states sharded over DP only (the baseline Sharded Optimizer).
-  * 'epso' — EP-Aware: states of 'model'-replicated params additionally
-             sharded over the model axis (DP×EP-way).
+  * 'epso' — EP-Aware: states of model-axis-replicated params additionally
+             sharded over the model-like axes (DP×EP-way).
 """
 from __future__ import annotations
 
@@ -33,8 +36,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 class ShardingRules:
     mesh: Optional[Mesh]
     batch_axes: tuple            # mesh axes sharding the batch/token dim
-    tp_axis: Optional[str]       # 'model' when TP active, else None
-    ep_axis: Optional[str]       # 'model' when EP active, else None
+    tp_axis: Optional[str]       # 'model' (legacy role) or 'tp' (plan mesh)
+    ep_axis: Optional[str]       # 'model' (legacy role) or 'ep' (plan mesh)
     fsdp: bool = False           # also shard params over data axes (ZeRO-3)
     pp_axis: Optional[str] = None  # 'pp' when pipeline stages are meshed
     cfg: object = None           # ModelConfig (for divisibility checks)
@@ -113,6 +116,21 @@ def resolve_batch_axes(global_batch: Optional[int], mesh: Mesh,
     return ()
 
 
+def ep_batch_axes(mesh: Mesh, ep_axis: str, global_batch: Optional[int],
+                  data_axes: Optional[tuple] = None) -> tuple:
+    """Token/batch axes under EP: tokens span (pod, data, ep_axis) when the
+    batch divides across them; otherwise fall back to the DP axes only and
+    let the MoE block reshard tokens over the EP axis internally (shard_map
+    in_specs). Shared by the legacy role inference and plan resolution so
+    the two paths can never diverge."""
+    if data_axes is None:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch = resolve_batch_axes(global_batch, mesh, data_axes + (ep_axis,))
+    if ep_axis not in batch:
+        batch = resolve_batch_axes(global_batch, mesh, data_axes)
+    return batch
+
+
 def make_rules(cfg, mesh: Optional[Mesh], *, role: Optional[str] = None,
                kind: str = "train", fsdp: Optional[bool] = None,
                global_batch: Optional[int] = None) -> ShardingRules:
@@ -136,12 +154,9 @@ def make_rules(cfg, mesh: Optional[Mesh], *, role: Optional[str] = None,
         if not ep_ok:
             role = "etp"    # e.g. mixtral 8e on 16-way axis
     if role == "ep":
-        cand = data_axes + (("model",) if has_model else ())
-        batch = resolve_batch_axes(global_batch, mesh, cand)
-        if "model" not in batch:
-            # batch not divisible across data x model: tokens are resharded
-            # over 'model' inside the MoE block instead (shard_map in_specs)
-            batch = resolve_batch_axes(global_batch, mesh, data_axes)
+        batch = ep_batch_axes(mesh, "model", global_batch, data_axes) \
+            if has_model else resolve_batch_axes(global_batch, mesh,
+                                                 data_axes)
         return ShardingRules(mesh, batch, None, "model" if has_model else None,
                              fsdp=bool(fsdp), pp_axis=pp, cfg=cfg)
     batch = resolve_batch_axes(global_batch, mesh, data_axes)
@@ -178,17 +193,18 @@ def _param_spec(path: str, shape, rules: ShardingRules) -> P:
         return spec
 
     # ---- MoE expert stacks (E, d, f) / (E, f, d) ----------------------------
+    # ep shards the stacked-expert dim; tp shards the experts' d_ff dim.
+    # With BOTH axes set (a plan mesh) the two compose into expert-TP:
+    # P(ep, None, tp) for gate/up, P(ep, tp, None) for down.
     if any(k in path for k in ("/moe/gate", "/moe/up", "/moe/down")) \
             and "shared" not in path and len(shape) == 3:
+        e = [None, None, None]
         if ep is not None and d(shape[0], ep):
-            return fsdp_wrap(P(ep, None, None))
-        if tp is not None:
-            ff_dim = 2 if "down" not in path else 1
-            if d(shape[ff_dim], tp):
-                e = [None, None, None]
-                e[ff_dim] = tp
-                return fsdp_wrap(P(*e))
-        return fsdp_wrap(P(None, None, None))
+            e[0] = ep
+        ff_dim = 2 if "down" not in path else 1
+        if tp is not None and d(shape[ff_dim], tp):
+            e[ff_dim] = tp
+        return fsdp_wrap(P(*e))
     if "/moe/router" in path:
         return fsdp_wrap(P(None, None))
 

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill_with_cache
+from repro.parallel.plan import use_kernel_plan
 from .kv_pool import SlotKVPool
 from .sampling import SamplingParams, position_keys, sample_tokens
 from .scheduler import FIFOScheduler, Request
@@ -62,27 +63,30 @@ def dropless_cfg(cfg: ModelConfig) -> ModelConfig:
 
 
 def make_decode_fn(cfg: ModelConfig, *, rules=None,
-                   compute_dtype=jnp.float32):
+                   compute_dtype=jnp.float32, kernel_plan=None):
     """Build the engine's decode lowering: one token for every slot, sampled
     with per-slot params. All arguments are (B,)-shaped except tokens (B, 1)
-    — jit once, reuse forever."""
+    — jit once, reuse forever. ``kernel_plan`` (a plan's KernelPlan) is
+    scoped over the trace."""
     cfg = dropless_cfg(cfg)
     vocab = cfg.vocab_size
 
     def decode_fn(params, tokens, cache, positions, seeds,
                   temperature, top_k, top_p):
-        logits, cache = decode_step(params, tokens, cache, positions, cfg,
-                                    rules=rules, compute_dtype=compute_dtype)
-        keys = position_keys(seeds, positions)
-        nxt = sample_tokens(logits[:, 0, :vocab], keys, temperature,
-                            top_k, top_p)
-        return nxt, cache
+        with use_kernel_plan(kernel_plan):
+            logits, cache = decode_step(params, tokens, cache, positions,
+                                        cfg, rules=rules,
+                                        compute_dtype=compute_dtype)
+            keys = position_keys(seeds, positions)
+            nxt = sample_tokens(logits[:, 0, :vocab], keys, temperature,
+                                top_k, top_p)
+            return nxt, cache
 
     return decode_fn
 
 
 def make_prefill_fn(cfg: ModelConfig, *, rules=None, mesh=None,
-                    compute_dtype=jnp.float32):
+                    compute_dtype=jnp.float32, kernel_plan=None):
     """Build the engine's prefill lowering: write prompt K/V into cache rows
     and sample the first generated token from the last-position logits
     (keyed on position length-1, so single-request replay matches)."""
@@ -91,13 +95,15 @@ def make_prefill_fn(cfg: ModelConfig, *, rules=None, mesh=None,
 
     def prefill_fn(params, tokens, cache, slots, lengths, seeds,
                    temperature, top_k, top_p):
-        last, cache = prefill_with_cache(params, tokens, cache, slots,
-                                         lengths, cfg, rules=rules, mesh=mesh,
-                                         compute_dtype=compute_dtype)
-        keys = position_keys(seeds, lengths - 1)
-        first = sample_tokens(last[:, :vocab], keys, temperature,
-                              top_k, top_p)
-        return first, cache
+        with use_kernel_plan(kernel_plan):
+            last, cache = prefill_with_cache(params, tokens, cache, slots,
+                                             lengths, cfg, rules=rules,
+                                             mesh=mesh,
+                                             compute_dtype=compute_dtype)
+            keys = position_keys(seeds, lengths - 1)
+            first = sample_tokens(last[:, :vocab], keys, temperature,
+                                  top_k, top_p)
+            return first, cache
 
     return prefill_fn
 
@@ -140,14 +146,19 @@ class ServeEngine:
                  max_len: int = 256, eos_id: Optional[int] = None,
                  scheduler: Optional[FIFOScheduler] = None,
                  cache_dtype=jnp.float32, compute_dtype=jnp.float32,
-                 rules=None, mesh=None, prefill_bucket: int = 8,
+                 plan=None, rules=None, mesh=None, prefill_bucket: int = 8,
                  decode_fn=None, prefill_fn=None):
         if cfg.arch_type not in ("dense", "moe"):
             raise NotImplementedError(
                 "ServeEngine drives attention-KV archs (dense, moe); "
                 f"got {cfg.arch_type!r}")
+        if plan is not None:      # a ResolvedPlan supplies the placement
+            rules = rules if rules is not None else plan.rules
+            mesh = mesh if mesh is not None else plan.mesh
+        kernel_plan = plan.kernel if plan is not None else None
         self.params = params
         self.cfg = cfg
+        self.plan = plan
         self.eos_id = eos_id
         self.pool = SlotKVPool(cfg, num_slots, max_len, cache_dtype)
         self.scheduler = scheduler or FIFOScheduler()
@@ -156,10 +167,12 @@ class ServeEngine:
         # cache across engines (benchmarks spin up several engines over the
         # same config — recompiling per engine would swamp the clock)
         self._decode = decode_fn or jax.jit(
-            make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype))
+            make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype,
+                           kernel_plan=kernel_plan))
         self._prefill = prefill_fn or jax.jit(
             make_prefill_fn(cfg, rules=rules, mesh=mesh,
-                            compute_dtype=compute_dtype))
+                            compute_dtype=compute_dtype,
+                            kernel_plan=kernel_plan))
         self._slots: dict[int, _SlotState] = {}
         self._results: dict[int, GenResult] = {}
         self._next_rid = 0

@@ -29,6 +29,7 @@ from repro.models import (init_params, loss_fn, forward, init_cache,
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
 from repro.optim.epso import optimizer_state_shardings
 from repro.parallel.pipeline import pipelined_loss_and_grads, stack_stages
+from repro.parallel.plan import ResolvedPlan, use_kernel_plan
 from repro.parallel.sharding import make_rules, shardings as param_shardings
 
 
@@ -58,13 +59,34 @@ def _resolve_rules(cfg, train, rules, mesh):
     return rules
 
 
-def init_state(rng, cfg: ModelConfig, train: TrainConfig, *, rules=None,
-               mesh=None, opt_sharding_mode: str = "none") -> TrainState:
-    """Initialize params + AdamW state. With ``rules``/``mesh``, every leaf
-    is device_put onto its SO/EPSO sharding right after host init, so the
-    first jitted step sees exactly the placement it was compiled for. (The
-    state is still materialized on one device first — models that only fit
-    sharded would jit init with these shardings as ``out_shardings``.)"""
+def _unpack_plan(plan: Optional[ResolvedPlan], rules, mesh,
+                 opt_sharding_mode):
+    """A ResolvedPlan supplies rules/mesh/opt mode in one object; explicit
+    kwargs (the legacy threading) win when both are given — an explicit
+    ``opt_sharding_mode='none'`` disables sharding even alongside an EPSO
+    plan (only ``None`` means 'take the plan's mode')."""
+    if plan is not None:
+        rules = rules if rules is not None else plan.rules
+        mesh = mesh if mesh is not None else plan.mesh
+        if opt_sharding_mode is None:
+            opt_sharding_mode = plan.opt_shard
+    return rules, mesh, opt_sharding_mode
+
+
+def init_state(rng, cfg: ModelConfig, train: TrainConfig, *,
+               plan: Optional[ResolvedPlan] = None, rules=None,
+               mesh=None,
+               opt_sharding_mode: Optional[str] = None) -> TrainState:
+    """Initialize params + AdamW state. With a ``plan`` (or legacy
+    ``rules``/``mesh``), every leaf is device_put onto its SO/EPSO sharding
+    right after host init, so the first jitted step sees exactly the
+    placement it was compiled for. (The state is still materialized on one
+    device first — models that only fit sharded would jit init with these
+    shardings as ``out_shardings``.)"""
+    rules, mesh, opt_sharding_mode = _unpack_plan(
+        plan, rules, mesh, opt_sharding_mode)
+    if opt_sharding_mode is None:     # no plan, nothing requested
+        opt_sharding_mode = "none"
     rules = _resolve_rules(cfg, train, rules, mesh)
     params = init_params(rng, cfg)
     opt = adamw_init(params)
@@ -77,18 +99,27 @@ def init_state(rng, cfg: ModelConfig, train: TrainConfig, *, rules=None,
     return state
 
 
-def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
-                    train: TrainConfig, *, rules=None, mesh=None,
+def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
+                    train: TrainConfig, *, plan: Optional[ResolvedPlan] = None,
+                    rules=None, mesh=None,
                     opt_sharding_mode: Optional[str] = None,
                     state_shardings=None):
-    """Build the train step. With ``opt_sharding_mode`` set ('none'|'so'|
+    """Build the train step.
+
+    The canonical call passes a resolved ``plan`` (parallel/plan.py), which
+    supplies rules + mesh + optimizer-sharding mode + pipeline schedule in
+    one object and scopes its KernelPlan over the step's trace (so tile
+    sizes / attention impl never leak across differently-planned steps);
+    ``parallel`` may then be None (derived via ``plan.parallel_config()``).
+
+    With ``opt_sharding_mode`` set ('none'|'so'|
     'epso') the step is returned jitted with the optimizer-state shardings as
     ``out_shardings`` — XLA derives the paper's reduce-scatter (grads into
     state shards) and all-gather (updated params) from the placement
     mismatch. A caller that already holds the ``train_state_shardings`` tree
     can pass it as ``state_shardings`` to skip the abstract init re-trace.
-    With ``opt_sharding_mode=None`` (default) the raw function is returned
-    and the caller jits it (legacy single-device path).
+    With ``opt_sharding_mode=None`` (default) and no plan the raw function is
+    returned and the caller jits it (legacy single-device path).
 
     With ``parallel.pp_stages > 1`` the loss/grad computation runs through
     the jitted 1f1b/gpipe pipeline executor instead of the microbatch
@@ -98,6 +129,14 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
     (``parallel.pipeline.pipelined_loss_and_grads``). The optimizer tail
     (cast, LR, clip, AdamW, SO/EPSO placement) is shared with the non-PP
     path."""
+    rules, mesh, opt_sharding_mode = _unpack_plan(
+        plan, rules, mesh, opt_sharding_mode)
+    if parallel is None:
+        if plan is None:
+            raise ValueError("make_train_step needs a ParallelConfig or a "
+                             "resolved plan")
+        parallel = plan.parallel_config()
+    kplan = plan.kernel if plan is not None else None
     rules = _resolve_rules(cfg, train, rules, mesh)
     if mesh is None and rules is not None:
         mesh = rules.mesh
@@ -164,7 +203,7 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
         loss = ce + (ca * aux + cz * z) / nl
         return loss, {"ce": ce}, grads
 
-    def train_step(state: TrainState, batch: dict):
+    def _train_step(state: TrainState, batch: dict):
         params = state.params
 
         if pp > 1:
@@ -210,6 +249,12 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
         out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
         return TrainState(new_params, new_opt), out_metrics
 
+    def train_step(state: TrainState, batch: dict):
+        # the body runs at trace time, so scoping the plan's kernel config
+        # here pins tile sizes / attention impl for this step's lowering
+        with use_kernel_plan(kplan):
+            return _train_step(state, batch)
+
     if opt_sharding_mode is None:
         return train_step
     if rules is None or rules.mesh is None:
@@ -223,45 +268,56 @@ def make_train_step(cfg: ModelConfig, parallel: ParallelConfig,
     return jax.jit(train_step, out_shardings=(ssh, None))
 
 
-def make_prefill_step(cfg: ModelConfig, *, rules=None, mesh=None,
+def make_prefill_step(cfg: ModelConfig, *, plan: Optional[ResolvedPlan] = None,
+                      rules=None, mesh=None,
                       compute_dtype=jnp.bfloat16, into_cache: bool = False):
     """``into_cache=False``: the prefill_32k lowering — forward over the
     batch, last-position logits. ``into_cache=True``: the serve engine's
     admission lowering — ``prefill_step(params, tokens, cache, slots,
     lengths)`` writes the prompts' K/V into the given cache slots and
     returns (last_logits, new_cache); see models.prefill_with_cache."""
+    rules, mesh, _ = _unpack_plan(plan, rules, mesh, "none")
+    kplan = plan.kernel if plan is not None else None
     if into_cache:
         from repro.serve.engine import dropless_cfg
         scfg = dropless_cfg(cfg)   # serving must be batching-transparent
 
         def prefill_step(params, tokens, cache, slots, lengths):
-            return prefill_with_cache(params, tokens, cache, slots, lengths,
-                                      scfg, rules=rules, mesh=mesh,
-                                      compute_dtype=compute_dtype)
+            with use_kernel_plan(kplan):
+                return prefill_with_cache(params, tokens, cache, slots,
+                                          lengths, scfg, rules=rules,
+                                          mesh=mesh,
+                                          compute_dtype=compute_dtype)
 
         return prefill_step
 
     def prefill_step(params, batch):
-        logits, _ = forward(params, batch, cfg, rules=rules, mesh=mesh,
-                            sac="", compute_dtype=compute_dtype)
-        return logits[:, -1]
+        with use_kernel_plan(kplan):
+            logits, _ = forward(params, batch, cfg, rules=rules, mesh=mesh,
+                                sac="", compute_dtype=compute_dtype)
+            return logits[:, -1]
 
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, *, rules=None,
-                    compute_dtype=jnp.bfloat16, sample: bool = False):
+def make_serve_step(cfg: ModelConfig, *, plan: Optional[ResolvedPlan] = None,
+                    rules=None, compute_dtype=jnp.bfloat16,
+                    sample: bool = False):
     """``index`` may be a scalar (lockstep batch, the decode_32k shape) or a
     (B,) vector of per-slot positions (continuous batching). With
     ``sample=True`` returns the serve engine's full decode lowering —
     ``(params, tokens, cache, positions, seeds, temperature, top_k, top_p)
     -> (next_tokens, new_cache)`` — built by serve.make_decode_fn."""
+    rules, _, _ = _unpack_plan(plan, rules, None, "none")
+    kplan = plan.kernel if plan is not None else None
     if sample:
         from repro.serve.engine import make_decode_fn
-        return make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype)
+        return make_decode_fn(cfg, rules=rules, compute_dtype=compute_dtype,
+                              kernel_plan=kplan)
 
     def serve_step(params, tokens, cache, index):
-        return decode_step(params, tokens, cache, index, cfg, rules=rules,
-                           compute_dtype=compute_dtype)
+        with use_kernel_plan(kplan):
+            return decode_step(params, tokens, cache, index, cfg, rules=rules,
+                               compute_dtype=compute_dtype)
 
     return serve_step

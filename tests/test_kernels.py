@@ -1,5 +1,7 @@
 """Per-kernel validation vs ref.py oracles (interpret mode) with
 shape/dtype sweeps + hypothesis property tests (spec deliverable (c))."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,10 +13,10 @@ from repro.kernels import ops, ref
 
 @pytest.fixture(autouse=True)
 def small_tiles():
-    old = dict(ops.KERNEL_CONFIG)
-    ops.KERNEL_CONFIG["tile_m"] = 8
-    yield
-    ops.KERNEL_CONFIG.update(old)
+    # plan-scoped: restores automatically, nothing leaks across tests
+    with ops.use_kernel_plan(dataclasses.replace(ops.current_kernel_plan(),
+                                                 tile_m=8)):
+        yield
 
 
 def _groups(rng, G, M, align):

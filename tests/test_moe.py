@@ -33,17 +33,19 @@ def test_impl_equivalence_dropless(setup):
     regime, forward and all gradients."""
     cfg, p, x = setup
     from repro.kernels import ops
-    ops.KERNEL_CONFIG["tile_m"] = 8
-    ref_out, _ = M.moe_naive(p, x, cfg.moe)
-    ref_g = jax.grad(lambda p: (M.moe_naive(p, x, cfg.moe)[0] ** 2).sum())(p)
-    for be in ("xla", "ragged", "pallas"):
-        out, _ = M.moe_dense_capacity(p, x, cfg.moe, backend=be)
-        np.testing.assert_allclose(out, ref_out, atol=1e-4, err_msg=be)
-        g = jax.grad(lambda p: (M.moe_dense_capacity(p, x, cfg.moe,
-                                                     backend=be)[0] ** 2).sum())(p)
-        for k in ("router", "gate", "up", "down"):
-            np.testing.assert_allclose(g[k], ref_g[k], atol=1e-3,
-                                       err_msg=f"{be}/{k}")
+    small = dataclasses.replace(ops.current_kernel_plan(), tile_m=8)
+    with ops.use_kernel_plan(small):   # scoped: no cross-test state leak
+        ref_out, _ = M.moe_naive(p, x, cfg.moe)
+        ref_g = jax.grad(
+            lambda p: (M.moe_naive(p, x, cfg.moe)[0] ** 2).sum())(p)
+        for be in ("xla", "ragged", "pallas"):
+            out, _ = M.moe_dense_capacity(p, x, cfg.moe, backend=be)
+            np.testing.assert_allclose(out, ref_out, atol=1e-4, err_msg=be)
+            g = jax.grad(lambda p: (M.moe_dense_capacity(
+                p, x, cfg.moe, backend=be)[0] ** 2).sum())(p)
+            for k in ("router", "gate", "up", "down"):
+                np.testing.assert_allclose(g[k], ref_g[k], atol=1e-3,
+                                           err_msg=f"{be}/{k}")
 
 
 def test_capacity_drops_counted():
