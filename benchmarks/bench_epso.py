@@ -68,8 +68,6 @@ def measure(mesh_spec: str = "4,2", steps: int = 5, d_model: int = 64,
     """Runs inside a process whose backend sees enough devices."""
     import time
 
-    import jax.numpy as jnp
-
     from repro.configs import ParallelConfig, TrainConfig, reduced
     from repro.parallel.plan import ParallelPlan
     from repro.train import init_state, make_train_step
@@ -120,10 +118,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="4,2")
     ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI bench-smoke mode: 2 timed steps")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_epso.json"))
     ap.add_argument("--_measure", action="store_true",
                     help=argparse.SUPPRESS)   # child-process mode
     args = ap.parse_args(argv)
+    if args.tiny:
+        args.steps = min(args.steps, 2)
 
     if args._measure:
         print(json.dumps(measure(args.mesh, steps=args.steps)))

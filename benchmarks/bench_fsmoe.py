@@ -8,7 +8,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import moe as M

@@ -1,0 +1,131 @@
+"""Bench-regression gate: compare a fresh BENCH_*.json against the
+committed baseline with a step-time tolerance, plus the structural
+properties each bench is supposed to demonstrate.
+
+Usage (the CI bench-smoke job):
+    python benchmarks/bench_scaling.py --tiny --out /tmp/BENCH_pp.fresh.json
+    python benchmarks/check_regression.py \
+        --fresh /tmp/BENCH_pp.fresh.json --baseline BENCH_pp.json
+
+    python benchmarks/bench_epso.py --tiny --out /tmp/BENCH_epso.fresh.json
+    python benchmarks/check_regression.py \
+        --fresh /tmp/BENCH_epso.fresh.json --baseline BENCH_epso.json
+
+Checks (kind auto-detected from the JSON shape):
+
+* BENCH_pp — every fresh (pp, schedule) point and (vocab, pp, impl)
+  executor point must be within ``--tol``x of the matching baseline step
+  time; the per-stage executor must stay at least ``--min-speedup``x the
+  masked one at the largest fresh vocab point (the reclaimed head compute
+  — a regression here means non-last stages are paying the vocab matmul
+  again, even if absolute times sit inside the tolerance band).
+* BENCH_epso — per-mode step times within tolerance; EPSO placed state
+  bytes must stay strictly below SO (the paper's memory mechanism).
+
+Step-time tolerance is deliberately loose (hardware varies across CI
+runners); the structural properties are the tight part of the gate.
+Exits non-zero with a per-violation report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_pp(fresh: dict, base: dict, tol: float, min_speedup: float) -> list:
+    errors = []
+    base_pts = {(p["pp"], p["schedule"]): p for p in base.get("points", [])}
+    for p in fresh.get("points", []):
+        key = (p["pp"], p["schedule"])
+        b = base_pts.get(key)
+        if b is None:
+            continue
+        if p["step_time_ms"] > b["step_time_ms"] * tol:
+            errors.append(
+                f"pp point {key}: fresh {p['step_time_ms']:.1f}ms > "
+                f"{tol}x baseline {b['step_time_ms']:.1f}ms")
+    base_exec = {(r["vocab"], r["pp"]): r
+                 for r in base.get("executor_points", [])}
+    for r in fresh.get("executor_points", []):
+        key = (r["vocab"], r["pp"])
+        b = base_exec.get(key)
+        if b is None:
+            continue
+        for impl in ("masked", "shardmap"):
+            ft = r[impl]["step_time_ms"]
+            bt = b[impl]["step_time_ms"]
+            if ft > bt * tol:
+                errors.append(
+                    f"executor point vocab={key[0]} pp={key[1]} {impl}: "
+                    f"fresh {ft:.1f}ms > {tol}x baseline {bt:.1f}ms")
+    ex = fresh.get("executor_points", [])
+    if ex:
+        biggest = max(ex, key=lambda r: r["vocab"])
+        if biggest["speedup"] < min_speedup:
+            errors.append(
+                f"per-stage executor speedup at vocab={biggest['vocab']} is "
+                f"{biggest['speedup']:.2f}x < required {min_speedup}x — the "
+                f"reclaimed embed/head compute regressed")
+    return errors
+
+
+def check_epso(fresh: dict, base: dict, tol: float) -> list:
+    errors = []
+    for mode, f in fresh.get("modes", {}).items():
+        b = base.get("modes", {}).get(mode)
+        if b is None:
+            continue
+        if f["step_time_ms"] > b["step_time_ms"] * tol:
+            errors.append(
+                f"epso mode {mode}: fresh {f['step_time_ms']:.1f}ms > "
+                f"{tol}x baseline {b['step_time_ms']:.1f}ms")
+    modes = fresh.get("modes", {})
+    if {"so", "epso"} <= modes.keys():
+        if modes["epso"]["state_bytes_per_device"] >= \
+                modes["so"]["state_bytes_per_device"]:
+            errors.append(
+                "EPSO placed state bytes not below SO: "
+                f"{modes['epso']['state_bytes_per_device']} >= "
+                f"{modes['so']['state_bytes_per_device']}")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--tol", type=float, default=2.5,
+                    help="step-time regression factor vs baseline")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required shardmap-vs-masked speedup at the "
+                         "largest fresh vocab point")
+    args = ap.parse_args(argv)
+
+    fresh, base = _load(args.fresh), _load(args.baseline)
+    if "executor_points" in fresh or "points" in fresh:
+        errors = check_pp(fresh, base, args.tol, args.min_speedup)
+        kind = "pp"
+    elif "modes" in fresh:
+        errors = check_epso(fresh, base, args.tol)
+        kind = "epso"
+    else:
+        print(f"unrecognized bench JSON shape in {args.fresh}")
+        return 2
+
+    if errors:
+        print(f"BENCH REGRESSION ({kind}): {len(errors)} violation(s)")
+        for e in errors:
+            print(" -", e)
+        return 1
+    print(f"bench gate ok ({kind}): fresh within {args.tol}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

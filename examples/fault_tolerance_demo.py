@@ -7,8 +7,6 @@ import sys
 import tempfile
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 sys.path.insert(0, "src")
 

@@ -7,8 +7,8 @@ the distribution strategy; TrainConfig the optimization recipe (paper §2.1).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -193,11 +193,20 @@ class ParallelConfig:
     # onto the 'pp' mesh axis; microbatches become pipeline microbatches
     pp_stages: int = 1
     pp_schedule: str = "1f1b"       # gpipe | 1f1b
+    # executor: 'shardmap' = per-stage programs over the 'pp' axis (only
+    # stage 0 embeds, only the last stage runs head+CE); 'masked' = legacy
+    # single-program SPMD where every stage pays the masked embed/head cost.
+    # 'shardmap' needs a meshed 'pp' axis; off-mesh runs fall back to
+    # 'masked' (the single-device PP simulation).
+    pp_impl: str = "shardmap"       # shardmap | masked
 
     def __post_init__(self):
         if self.pp_schedule not in ("gpipe", "1f1b"):
             raise ValueError(f"pp_schedule must be 'gpipe' or '1f1b', "
                              f"got {self.pp_schedule!r}")
+        if self.pp_impl not in ("shardmap", "masked"):
+            raise ValueError(f"pp_impl must be 'shardmap' or 'masked', "
+                             f"got {self.pp_impl!r}")
         if self.pp_stages < 1:
             raise ValueError(f"pp_stages must be >= 1, got {self.pp_stages}")
         if self.microbatches < 1:

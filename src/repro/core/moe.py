@@ -32,13 +32,13 @@ cf >= 1.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro import compat as _compat  # installs jax.shard_map on old jax
+from repro import compat as _compat  # noqa: F401 — installs jax.shard_map on old jax
 
 from .router import RouterOut, route
 
@@ -261,7 +261,6 @@ def dispatch_compute_combine(gate_w, up_w, down_w, x, r: RouterOut, moe_cfg,
                               align=align,
                               uniform_capacity=(backend == "xla"))
     if backend == "pallas":
-        from repro.kernels.ops import token_counts as _tc
         # Stage 2 on the Pallas path: histogram computed in-kernel; checked
         # against the plan's bincount by tests. (Same values; plan drives
         # index generation either way.)

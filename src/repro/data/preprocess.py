@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 

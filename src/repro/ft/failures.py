@@ -16,12 +16,9 @@
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

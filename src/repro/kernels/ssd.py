@@ -18,7 +18,6 @@ path — same math; this is the serving/prefill hot loop for hybrid archs).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -29,15 +29,11 @@ corrections (their in-scan flops are tiny relative to the matmuls).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, TrainConfig, InputShape
+from repro.configs.base import ModelConfig, InputShape
 from repro.models import model as M
 from repro.models import layers as L
 from repro.models import ssm as S
@@ -537,3 +533,82 @@ def _analyze_optimizer(cfg, acc, rules, opt_mode):
         _dp_grad_reduce_bytes(params_bf16, rules)
     acc["coll"]["total"] = sum(v for k, v in acc["coll"].items()
                                if k != "total")
+
+
+# ----------------------------------------------------------------------------
+# analytic per-stage pipeline accounting (no compile — dryrun + bench_scaling)
+# ----------------------------------------------------------------------------
+
+def per_stage_costs(cfg: ModelConfig, *, pp: int, microbatches: int,
+                    seq: int, global_batch: int,
+                    pp_impl: str = "shardmap",
+                    schedule: str = "1f1b") -> dict:
+    """Projected per-stage FLOPs/bytes of one pipelined train step.
+
+    Shape-only analytics (nothing is lowered or compiled): per-layer FLOPs
+    come from the active per-layer parameter count plus the attention
+    quadratic term; the embed/head/CE terms are attributed per stage
+    according to the executor:
+
+    * ``pp_impl='masked'`` — single-program SPMD: *every* stage pays the
+      masked head+CE on every tick (fwd on F waves; recompute + backward on
+      B waves) because SPMD cannot branch per stage.
+    * ``pp_impl='shardmap'`` — per-stage programs: only stage 0 embeds,
+      only the last stage runs head+CE, and the backward reuses the saved
+      stage output (no head recompute on B waves).
+
+    Both executors compute a masked F-wave and B-wave on every clock tick,
+    so totals scale with the tick count T(n_mb, pp) — bubble ticks included
+    (that is the honest simulated-mesh cost; on real stage-local hardware
+    bubble ticks idle instead).
+
+    Returns {"ticks", "stages": [{stage, role, block_gflops, embed_gflops,
+    head_gflops, total_gflops, act_gbytes}, ...]}.
+    """
+    from repro.models.model import padded_vocab
+    from repro.parallel.pipeline import schedule_masks
+
+    n_mb = max(microbatches, 1)
+    if pp > 1:
+        T = schedule_masks(schedule, n_mb, pp)["ticks"]
+    else:
+        T = n_mb                                   # plain microbatch scan
+    mb_rows = max(global_batch // n_mb, 1)
+    t = mb_rows * seq                              # tokens per microbatch
+    d = cfg.d_model
+    vp = padded_vocab(cfg)
+
+    # per-layer active params: active total minus embed/head tables
+    emb_params = vp * d * (1 if cfg.tie_embeddings else 2)
+    p_layer = max((cfg.active_param_count() - emb_params)
+                  / max(cfg.num_layers, 1), 0.0)
+    # fwd flops: 2*p*t matmuls + 4*t*S*d attention scores/values (causal
+    # not discounted); one tick's work = 1x fwd (F wave) + 3x fwd-equiv
+    # (B wave: block-input recompute + backward)
+    f_layer = 2.0 * p_layer * t + 4.0 * t * seq * d
+    f_head = 2.0 * t * d * vp                      # unembed matmul fwd
+    layers_per_stage = max(cfg.num_layers // max(pp, 1), 1)
+
+    stages = []
+    for s in range(pp):
+        first, last = s == 0, s == pp - 1
+        block = T * 4.0 * f_layer * layers_per_stage
+        if pp_impl == "masked" or pp == 1:
+            head = T * 4.0 * f_head                # every stage, every tick
+            embed_b = T * 2.0 * t * d * 4.0        # masked embed gather r/w
+            role = "embed+blocks+head_ce (masked)" if pp > 1 else "all"
+        else:
+            head = T * 3.0 * f_head if last else 0.0   # saved-output bwd
+            embed_b = T * 2.0 * t * d * 4.0 if first else 0.0
+            role = ("embed+blocks" if first else
+                    "blocks+head_ce" if last else "blocks")
+        act_bytes = T * 2.0 * t * d * 4.0 + embed_b    # hand-off + embed
+        stages.append({
+            "stage": s, "role": role,
+            "block_gflops": block / 1e9,
+            "head_gflops": head / 1e9,
+            "total_gflops": (block + head) / 1e9,
+            "act_gbytes": act_bytes / 1e9,
+        })
+    return {"ticks": int(T), "pp": pp, "impl": pp_impl if pp > 1 else "-",
+            "microbatches": n_mb, "stages": stages}

@@ -30,7 +30,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
                            ParallelConfig, TrainConfig, get_config)
@@ -190,10 +189,51 @@ def print_parallel_plan(spec: str, arch: str, *, global_batch: int = 256,
     (jax.eval_shape) — no allocation, no compile; safe as a CI smoke."""
     from repro.parallel.plan import ParallelPlan
     cfg = get_config(arch)
-    plan = ParallelPlan.parse(spec).resolve(cfg, train_cfg,
-                                            global_batch=global_batch)
+    pplan = ParallelPlan.parse(spec)
+    plan = pplan.resolve(cfg, train_cfg, global_batch=global_batch)
     text = plan.describe(cfg)
     print(f"== resolved plan for {arch} (global_batch={global_batch}) ==")
+    print(text)
+    if pplan.pp > 1:
+        text += "\n" + print_per_stage_costs(cfg, pplan,
+                                             global_batch=global_batch)
+    return text
+
+
+def print_per_stage_costs(cfg, pplan, *, global_batch: int,
+                          seq: int = 2048) -> str:
+    """Per-stage projected FLOPs/bytes for a pp>1 plan — makes the head
+    compute the shard_map executor reclaims visible without compiling.
+    Prints the plan's executor next to the masked baseline."""
+    from repro.launch.costmodel import per_stage_costs
+    lines = []
+    n_mb = max(pplan.microbatches, 2 * pplan.pp)
+    impls = [pplan.pp_impl] + (["masked"] if pplan.pp_impl != "masked"
+                               else [])
+    reps = {}
+    for impl in impls:
+        rep = per_stage_costs(cfg, pp=pplan.pp, microbatches=n_mb,
+                              seq=seq, global_batch=global_batch,
+                              pp_impl=impl, schedule=pplan.pp_schedule)
+        reps[impl] = rep
+        lines.append(f"-- per-stage projection [impl={impl}] "
+                     f"(seq={seq}, mb={rep['microbatches']}, "
+                     f"ticks={rep['ticks']}) --")
+        lines.append(f"{'stage':>5s} {'role':32s} {'blocks':>12s} "
+                     f"{'head+ce':>12s} {'total':>12s} {'act-bytes':>11s}")
+        for st in rep["stages"]:
+            lines.append(
+                f"{st['stage']:5d} {st['role']:32s} "
+                f"{st['block_gflops']:10.1f}GF {st['head_gflops']:10.1f}GF "
+                f"{st['total_gflops']:10.1f}GF {st['act_gbytes']:8.2f}GiB")
+    if pplan.pp_impl != "masked":
+        saved = (sum(x["head_gflops"] for x in reps["masked"]["stages"])
+                 - sum(x["head_gflops"]
+                       for x in reps[pplan.pp_impl]["stages"]))
+        lines.append(f"reclaimed head+CE compute vs masked: {saved:.1f} GF "
+                     f"per step ({pplan.pp - 1} of {pplan.pp} stages skip "
+                     f"the vocab-sized matmul entirely)")
+    text = "\n".join(lines)
     print(text)
     return text
 

@@ -104,6 +104,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
         parallel: str = None,
         opt_shard: str = None, pp_schedule: str = None,
+        pp_impl: str = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
@@ -142,10 +143,14 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             pplan = dataclasses.replace(pplan, opt_shard=opt_shard)
         if pp_schedule is not None:
             pplan = dataclasses.replace(pplan, pp_schedule=pp_schedule)
+        if pp_impl is not None:
+            pplan = dataclasses.replace(pplan, pp_impl=pp_impl)
     elif mesh:
         pplan = ParallelPlan.from_legacy(mesh, cfg=cfg,
                                          opt_shard=opt_shard or "none",
                                          pp_schedule=pp_schedule or "1f1b")
+        if pp_impl is not None:
+            pplan = dataclasses.replace(pplan, pp_impl=pp_impl)
     else:
         pplan = None
     opt_shard = pplan.opt_shard if pplan is not None else (opt_shard
@@ -173,6 +178,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         pplan = dataclasses.replace(pplan, microbatches=microbatches)
     pp_schedule = pplan.pp_schedule if pplan is not None \
         else (pp_schedule or "1f1b")
+    pp_impl = pplan.pp_impl if pplan is not None else (pp_impl or "shardmap")
 
     # resolve once: builds the mesh (forcing host devices first) + rules
     plan = pplan.resolve(cfg, global_batch=batch) if pplan is not None \
@@ -189,7 +195,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                         seed=seed)
     par = ParallelConfig(microbatches=microbatches, remat_policy=sac,
                          optimizer_sharding=opt_shard,
-                         pp_stages=pp_stages, pp_schedule=pp_schedule)
+                         pp_stages=pp_stages, pp_schedule=pp_schedule,
+                         pp_impl=pp_impl)
 
     state = init_state(jax.random.PRNGKey(seed), cfg, train, plan=plan,
                        opt_sharding_mode=opt_shard)
@@ -234,7 +241,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
           f"vocab={padded_vocab(cfg)} "
           f"plan={pplan if pplan is not None else 'single'} "
           f"opt_shard={opt_shard} pp={pp_stages}"
-          + (f":{pp_schedule}" if pp_stages > 1 else ""))
+          + (f":{pp_schedule}:{pp_impl}" if pp_stages > 1 else ""))
 
     injected = {"hard": False, "soft": False}
     history = {}          # keyed by step: replays after restore overwrite
@@ -295,6 +302,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                "parallel": str(pplan) if pplan is not None else None,
                "opt_shard": opt_shard, "pp_stages": pp_stages,
                "pp_schedule": pp_schedule if pp_stages > 1 else None,
+               "pp_impl": pp_impl if pp_stages > 1 else None,
                "relaunches": relaunches,
                "replaced": result.replaced,
                "final_loss": result[-1]["loss"] if result else None}
@@ -346,6 +354,14 @@ def main():
                     help="pipeline microbatch schedule when the plan has a "
                          "pp axis (paper §2.2: Mula-100B/220B train 1f1b); "
                          "overrides a --parallel spec's schedule= option")
+    ap.add_argument("--pp-impl", default=None,
+                    choices=["shardmap", "masked"],
+                    help="pipeline executor: 'shardmap' (default) runs "
+                         "per-stage programs over the 'pp' axis — only "
+                         "stage 0 embeds, only the last stage runs the "
+                         "vocab-sized head+CE; 'masked' is the legacy "
+                         "single-program SPMD executor. Overrides a "
+                         "--parallel spec's impl= option")
     ap.add_argument("--n-buffer", type=int, default=2,
                     help="buffer nodes for hard-failure replacement")
     ap.add_argument("--inject-hard-at", type=int, default=None,
@@ -362,6 +378,7 @@ def main():
         ckpt_interval=args.ckpt_interval, mesh=args.mesh,
         parallel=args.parallel,
         opt_shard=args.opt_shard, pp_schedule=args.pp_schedule,
+        pp_impl=args.pp_impl,
         n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,
         inject_soft_at=args.inject_soft_at)

@@ -9,7 +9,6 @@ repro.parallel.sharding).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -151,12 +150,17 @@ def _blockwise_attention(q, k, v, *, causal: bool, window: int,
 
     neg = jnp.float32(-1e30)
 
-    def q_step(_, qi):
+    # NOTE: both block scans walk a *carried* int32 counter instead of
+    # scanning over a jnp.arange xs: an iota-valued scan operand trips the
+    # SPMD partitioner inside partial-auto shard_map regions (the
+    # per-stage pipeline executor) on jax 0.4.x — "Check failed:
+    # sharding.IsManualSubgroup()". A carried counter is bit-identical.
+    def q_step(qi, _):
         qt = qr[:, :, :, qi].astype(jnp.float32) * scale   # (B,nkv,g,qb,hd)
         qp = q_pos[qi]                                     # (qb,)
 
-        def kv_step(carry, ki):
-            m, l, acc = carry
+        def kv_step(carry, _):
+            m, l, acc, ki = carry
             kt = kr[:, :, ki].astype(jnp.float32)          # (B,nkv,kb,hd)
             vt = vr[:, :, ki].astype(jnp.float32)
             s = jnp.einsum("bngqh,bnkh->bngqk", qt, kt)    # (B,nkv,g,qb,kb)
@@ -174,16 +178,18 @@ def _blockwise_attention(q, k, v, *, causal: bool, window: int,
             l_new = l * corr + p.sum(-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bngqk,bnkh->bngqh", p, vt)
-            return (m_new, l_new, acc_new), None
+            return (m_new, l_new, acc_new, ki + 1), None
 
         m0 = jnp.full((B, nkv, groups, qb), neg)
         l0 = jnp.zeros((B, nkv, groups, qb))
         a0 = jnp.zeros((B, nkv, groups, qb, hd))
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        (m, l, acc, _), _ = jax.lax.scan(kv_step, (m0, l0, a0, jnp.int32(0)),
+                                         None, length=nk)
         out = acc / jnp.maximum(l[..., None], 1e-30)
-        return None, out
+        return qi + 1, out
 
-    _, o = jax.lax.scan(q_step, None, jnp.arange(nq))      # (nq,B,nkv,g,qb,hd)
+    _, o = jax.lax.scan(q_step, jnp.int32(0), None,
+                        length=nq)                         # (nq,B,nkv,g,qb,hd)
     o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_pad, nh, hd)
     return o[:, :Sq].astype(q.dtype)
 

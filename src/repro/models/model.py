@@ -17,13 +17,11 @@ paper's semantics.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig
 from repro.core import moe as moe_lib
 from . import layers as L
 from . import ssm as S

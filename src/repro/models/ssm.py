@@ -11,8 +11,6 @@ single-token decode step (the reason SSM archs run the long_500k shape).
 from __future__ import annotations
 
 import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
@@ -224,15 +222,20 @@ def _ssd_chunked(x, dt, Bm, Cm, A, chunk: int, h0=None):
 
     chunk_decay = jnp.exp(la[:, :, -1, :])             # (B,C,H) total decay
 
-    def step(h, c):
+    # carried chunk counter, not a jnp.arange xs: iota scan operands trip
+    # the SPMD partitioner inside partial-auto shard_map (see
+    # layers._blockwise_attention); a carried counter is bit-identical.
+    def step(carry, _):
+        h, c = carry
         y_off_c = jnp.einsum("bin,bih,bhpn->bihp",
                              Cb[:, c], jnp.exp(la[:, c]), h)
         h = chunk_decay[:, c][..., None, None] * h + states[:, c]
-        return h, y_off_c
+        return (h, c + 1), y_off_c
 
     h_init = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None
               else h0.astype(jnp.float32))
-    h_last, y_off = jax.lax.scan(step, h_init, jnp.arange(C))
+    (h_last, _), y_off = jax.lax.scan(step, (h_init, jnp.int32(0)),
+                                      None, length=C)
     y_off = y_off.transpose(1, 0, 2, 3, 4)             # (B,C,L,H,P)
     y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
     return y[:, :S_orig], h_last

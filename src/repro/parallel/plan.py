@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -147,6 +146,7 @@ AXES: Tuple[Tuple[str, str], ...] = (
 _AXIS_KEYS = tuple(k for k, _ in AXES)
 _OPT_MODES = ("none", "so", "epso")
 _PP_SCHEDULES = ("gpipe", "1f1b")
+_PP_IMPLS = ("shardmap", "masked")
 
 
 @dataclass(frozen=True)
@@ -159,6 +159,7 @@ class ParallelPlan:
     pod: int = 1
     opt_shard: str = "none"          # none | so | epso  (paper §3.2)
     pp_schedule: str = "1f1b"        # gpipe | 1f1b      (paper §2.2)
+    pp_impl: str = "shardmap"        # shardmap (per-stage programs) | masked
     microbatches: int = 1
     fsdp: bool = False
     kernel: KernelPlan = field(default_factory=KernelPlan)
@@ -175,6 +176,9 @@ class ParallelPlan:
         if self.pp_schedule not in _PP_SCHEDULES:
             raise ValueError(f"pp_schedule must be one of {_PP_SCHEDULES}, "
                              f"got {self.pp_schedule!r}")
+        if self.pp_impl not in _PP_IMPLS:
+            raise ValueError(f"pp_impl must be one of {_PP_IMPLS}, "
+                             f"got {self.pp_impl!r}")
 
     # ---- spec string <-> plan ------------------------------------------------
     @classmethod
@@ -219,13 +223,16 @@ class ParallelPlan:
                 put("opt_shard", v)
             elif k in ("schedule", "pp_schedule", "sched"):
                 put("pp_schedule", v)
+            elif k in ("impl", "pp_impl"):
+                put("pp_impl", v)
             elif k == "fsdp":
                 put("fsdp", v not in ("0", "false", "False"))
             else:
                 raise ValueError(
                     f"unknown role {k!r} in parallel spec {spec!r}; valid "
                     f"axes: {', '.join(_AXIS_KEYS)}; options: opt={{none|so|"
-                    f"epso}}, schedule={{gpipe|1f1b}}, mb=<int>, fsdp")
+                    f"epso}}, schedule={{gpipe|1f1b}}, "
+                    f"impl={{shardmap|masked}}, mb=<int>, fsdp")
         kw.update(overrides)
         return cls(**kw)
 
@@ -241,6 +248,8 @@ class ParallelPlan:
             parts.append(f"opt={self.opt_shard}")
         if self.pp_schedule != "1f1b":
             parts.append(f"schedule={self.pp_schedule}")
+        if self.pp_impl != "shardmap":
+            parts.append(f"impl={self.pp_impl}")
         if self.microbatches != 1:
             parts.append(f"mb={self.microbatches}")
         if self.fsdp:
@@ -396,6 +405,10 @@ class ResolvedPlan:
         return self.plan.pp_schedule
 
     @property
+    def pp_impl(self) -> str:
+        return self.plan.pp_impl
+
+    @property
     def kernel(self) -> KernelPlan:
         return self.plan.kernel
 
@@ -406,7 +419,8 @@ class ResolvedPlan:
                               remat_policy=remat_policy,
                               optimizer_sharding=self.opt_shard,
                               pp_stages=self.pp_stages,
-                              pp_schedule=self.pp_schedule)
+                              pp_schedule=self.pp_schedule,
+                              pp_impl=self.pp_impl)
 
     # ---- checkpoint metadata -------------------------------------------------
     def layout_signature(self) -> dict:

@@ -15,7 +15,6 @@ engine's admission path).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -23,12 +22,15 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
-from repro.models import (init_params, loss_fn, forward, init_cache,
+from repro.models import (init_params, loss_fn, forward,
                           decode_step, prefill_with_cache, embed_tokens,
                           pipeline_stage_forward, lm_head_ce, PP_ARCH_TYPES)
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
 from repro.optim.epso import optimizer_state_shardings
-from repro.parallel.pipeline import pipelined_loss_and_grads, stack_stages
+from repro.parallel.pipeline import (check_pp_microbatches,
+                                     pipelined_loss_and_grads,
+                                     pipelined_loss_and_grads_per_stage,
+                                     stack_stages)
 from repro.parallel.plan import ResolvedPlan, use_kernel_plan
 from repro.parallel.sharding import make_rules, shardings as param_shardings
 
@@ -148,6 +150,10 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
     if pp > 1 and cfg.arch_type not in PP_ARCH_TYPES:
         raise ValueError(f"pp_stages={pp} needs arch_type in {PP_ARCH_TYPES},"
                          f" not {cfg.arch_type!r}")
+    if (pp > 1 and parallel.pp_impl == "shardmap" and mesh is not None
+            and "pp" in getattr(mesh, "shape", {})):
+        # surface the wave-balance guardrail at build time, not first call
+        check_pp_microbatches(max(nmb, 1), pp)
 
     def loss_for(params, mb):
         return loss_fn(params, mb, cfg, rules=rules, mesh=mesh,
@@ -159,26 +165,44 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
         return jax.tree.map(
             lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
+    def pp_uses_shardmap():
+        """The per-stage executor needs real stage shards: a mesh with a
+        'pp' axis. Off-mesh (the single-device PP simulation) falls back to
+        the masked executor, which bit-matches the non-PP step."""
+        return (parallel.pp_impl == "shardmap" and mesh is not None
+                and "pp" in getattr(mesh, "shape", {}))
+
     def pp_loss_and_grads(params, batch):
-        """Pipelined loss+grads: bit-equal math to running the stage slices
-        sequentially per microbatch and summing grads in microbatch order
-        (the acc_step contract), executed in 1f1b/gpipe schedule order."""
+        """Pipelined loss+grads in 1f1b/gpipe schedule order. Both executors
+        share the same model pieces (embed_tokens / pipeline_stage_forward /
+        lm_head_ce), tick tables and grad contract:
+
+        * 'masked' — single-program SPMD; bit-equal math to running the
+          stage slices sequentially per microbatch and summing grads in
+          microbatch order (the acc_step contract), at the cost of every
+          stage computing the masked embed/head+CE each tick.
+        * 'shardmap' (default on a 'pp' mesh) — shard_map-per-stage: only
+          stage 0 embeds and only the last stage runs the vocab-sized
+          head+CE; loss is bit-equal to 'masked', grads to ~1 ulp."""
         n_mb = max(nmb, 1)
         mbs = split_mb(batch, n_mb)
         io_params = {k: v for k, v in params.items() if k != "layers"}
         stage_params = stack_stages(params["layers"], pp, name=cfg.name)
 
-        def stage_fn(io, lp, x, mb, sid):
-            emb = embed_tokens(io, mb["tokens"], cfg, compute_dtype=cd)
-            h = jnp.where(sid == 0, emb, x)          # stage 0 ingests tokens
+        def embed_fn(io, mb):
+            return embed_tokens(io, mb["tokens"], cfg, compute_dtype=cd)
+
+        def block_fn(lp, h, mb):
             # NOTE: PP stages run the MoE dense-capacity path (c_align=1),
             # not the non-PP EP shard_map variant — GSPMD still shards the
             # expert compute via the param placement, but capacity behavior
             # matches the single-device reference (the parity tests' basis)
             h, aux, z = pipeline_stage_forward(lp, h, cfg,
                                                sac=parallel.remat_policy)
-            ce = lm_head_ce(io, h, mb["labels"], cfg)  # masked off-last-stage
-            return h, {"ce": ce, "aux": aux, "z": z}
+            return h, {"aux": aux, "z": z}
+
+        def head_fn(io, h, mb):
+            return lm_head_ce(io, h, mb["labels"], cfg)
 
         ca = cfg.moe.router_aux_coef if cfg.is_moe else 0.0
         cz = cfg.moe.router_z_coef if cfg.is_moe else 0.0
@@ -188,11 +212,24 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
                 "z": jnp.full((pp,), cz / nl, jnp.float32)}
         mb_b = batch["tokens"].shape[0] // n_mb
         seq = batch["tokens"].shape[1]
-        ssum, g_io, g_stage = pipelined_loss_and_grads(
-            stage_fn, io_params, stage_params, mbs, cots,
-            act_shape=(mb_b, seq, cfg.d_model), act_dtype=cd,
-            schedule=parallel.pp_schedule, mesh=mesh,
-            batch_axes=tuple(rules.batch_axes) if rules is not None else ())
+        baxes = tuple(rules.batch_axes) if rules is not None else ()
+        if pp_uses_shardmap():
+            ssum, g_io, g_stage = pipelined_loss_and_grads_per_stage(
+                embed_fn, block_fn, head_fn, io_params, stage_params, mbs,
+                cots, act_shape=(mb_b, seq, cfg.d_model), act_dtype=cd,
+                schedule=parallel.pp_schedule, mesh=mesh, batch_axes=baxes)
+        else:
+            def stage_fn(io, lp, x, mb, sid):
+                emb = embed_fn(io, mb)
+                h = jnp.where(sid == 0, emb, x)      # stage 0 ingests tokens
+                h, scal = block_fn(lp, h, mb)
+                ce = head_fn(io, h, mb)              # masked off-last-stage
+                return h, {"ce": ce, **scal}
+
+            ssum, g_io, g_stage = pipelined_loss_and_grads(
+                stage_fn, io_params, stage_params, mbs, cots,
+                act_shape=(mb_b, seq, cfg.d_model), act_dtype=cd,
+                schedule=parallel.pp_schedule, mesh=mesh, batch_axes=baxes)
         grads = dict(g_io)
         grads["layers"] = jax.tree.map(lambda g, p: g.reshape(p.shape),
                                        g_stage, params["layers"])

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import (Checkpointer, dp_scattered_writers,
                               save_pytree, load_pytree)

@@ -1,7 +1,7 @@
 """Config registry: every assigned arch present, Table 1 counts reproduced."""
 import pytest
 
-from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES,
                            get_config, reduced)
 
 

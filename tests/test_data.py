@@ -1,6 +1,4 @@
 """Data pipeline (paper §4): tokenize -> shuffle -> shard -> mmap loading."""
-import json
-import os
 
 import numpy as np
 import pytest

@@ -1,12 +1,10 @@
 """SO vs EPSO optimizer-state sharding (paper §3.2) — spec-level properties
 checked on an abstract mesh (no devices needed beyond CPU)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
 
-from repro.configs import get_config, reduced
+from repro.configs import get_config
 from repro.models import init_params
 from repro.optim.epso import optimizer_state_specs, state_bytes_per_device
 from repro.parallel.sharding import make_rules

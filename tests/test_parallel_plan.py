@@ -45,10 +45,13 @@ def test_parse_basic():
        st.integers(1, 4), st.integers(1, 2),
        st.sampled_from(["none", "so", "epso"]),
        st.sampled_from(["gpipe", "1f1b"]),
+       st.sampled_from(["shardmap", "masked"]),
        st.integers(1, 8), st.booleans())
-def test_parse_str_roundtrip(dp, pp, ep, tp, pod, opt, sched, mb, fsdp):
+def test_parse_str_roundtrip(dp, pp, ep, tp, pod, opt, sched, impl, mb,
+                             fsdp):
     p = ParallelPlan(dp=dp, pp=pp, ep=ep, tp=tp, pod=pod, opt_shard=opt,
-                     pp_schedule=sched, microbatches=mb, fsdp=fsdp)
+                     pp_schedule=sched, pp_impl=impl, microbatches=mb,
+                     fsdp=fsdp)
     assert ParallelPlan.parse(str(p)) == p
 
 
@@ -65,6 +68,8 @@ def test_parse_errors_are_descriptive():
         ParallelPlan.parse("dp=2,opt=zorp")
     with pytest.raises(ValueError, match="pp_schedule"):
         ParallelPlan.parse("dp=2,schedule=zigzag")
+    with pytest.raises(ValueError, match="pp_impl"):
+        ParallelPlan.parse("dp=2,pp=2,impl=telepathy")
     with pytest.raises(ValueError, match="duplicate 'dp'"):
         ParallelPlan.parse("dp=2,ep=4,dp=8")   # typo'd spec, never last-wins
 

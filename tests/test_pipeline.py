@@ -167,3 +167,79 @@ def test_parallel_config_validates_pp():
     with pytest.raises(ValueError, match="microbatches"):
         ParallelConfig(microbatches=0)
     assert ParallelConfig(pp_stages=4, pp_schedule="gpipe").pp_stages == 4
+
+
+# ---------------------------------------------------------------------------
+# per-stage executor plumbing: tick-table invariants, wave-balance guardrail,
+# analytic per-stage cost attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pp,n_mb", [(2, 4), (2, 8), (4, 8), (8, 16)])
+def test_tick_tables_agree_on_fb_counts_per_stage(pp, n_mb):
+    """gpipe and 1f1b order the work differently but every stage runs
+    exactly n_mb forwards and n_mb backwards under both schedules."""
+    for sched in ("gpipe", "1f1b"):
+        ticks = (PP.gpipe_schedule if sched == "gpipe"
+                 else PP.one_f_one_b_schedule)(n_mb, pp)
+        for s in range(pp):
+            fs = [t for t in ticks if t.stage == s and t.kind == "F"]
+            bs = [t for t in ticks if t.stage == s and t.kind == "B"]
+            assert len(fs) == len(bs) == n_mb, (sched, s)
+            # each microbatch exactly once per direction
+            assert sorted(t.mb for t in fs) == list(range(n_mb))
+            assert sorted(t.mb for t in bs) == list(range(n_mb))
+    # the dense mask tables carry the same counts
+    for sched in ("gpipe", "1f1b"):
+        m = PP.schedule_masks(sched, n_mb, pp)
+        assert m["do_f"].sum(axis=0).tolist() == [n_mb] * pp
+        assert m["do_b"].sum(axis=0).tolist() == [n_mb] * pp
+
+
+def test_check_pp_microbatches_raises_descriptive():
+    with pytest.raises(ValueError, match="divisible by pp_stages"):
+        PP.check_pp_microbatches(3, 2)
+    with pytest.raises(ValueError, match="pp_impl='masked'"):
+        PP.check_pp_microbatches(5, 4)       # suggests the fallback
+    PP.check_pp_microbatches(8, 4)           # divisible: fine
+    PP.check_pp_microbatches(4, 4)
+
+
+def test_per_stage_executor_requires_pp_mesh():
+    with pytest.raises(ValueError, match="mesh with a 'pp' axis"):
+        PP.pipelined_loss_and_grads_per_stage(
+            None, None, None, {}, {"x": jnp.zeros((2, 1))},
+            {"x": jnp.zeros((2, 1))}, {"ce": jnp.zeros((2,))},
+            act_shape=(1,), act_dtype=jnp.float32, mesh=None)
+
+
+def test_per_stage_costs_attribution():
+    """masked: every stage pays head+CE; shardmap: only the last stage —
+    and the reclaimed compute grows with vocab size."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.launch.costmodel import per_stage_costs
+
+    cfg = reduced(get_config("mula-7b-a1b"), layers=4, d_model=64)
+
+    def reclaimed(vocab):
+        c = dataclasses.replace(cfg, vocab_size=vocab)
+        m = per_stage_costs(c, pp=4, microbatches=8, seq=128,
+                            global_batch=16, pp_impl="masked")
+        s = per_stage_costs(c, pp=4, microbatches=8, seq=128,
+                            global_batch=16, pp_impl="shardmap")
+        heads_m = [x["head_gflops"] for x in m["stages"]]
+        heads_s = [x["head_gflops"] for x in s["stages"]]
+        # masked is uniform and nonzero on every stage
+        assert all(h == heads_m[0] > 0 for h in heads_m)
+        # per-stage: interior stages pay nothing, last pays less than
+        # masked (saved-output backward skips the head recompute)
+        assert heads_s[:-1] == [0.0] * 3
+        assert 0 < heads_s[-1] < heads_m[-1]
+        # block cost stays uniform across stages in both
+        assert all(x["block_gflops"] == m["stages"][0]["block_gflops"]
+                   for x in m["stages"] + s["stages"])
+        return sum(heads_m) - sum(heads_s)
+
+    r512, r8k = reclaimed(512), reclaimed(8192)
+    assert 0 < r512 < r8k                    # the win grows with vocab

@@ -3,7 +3,6 @@ configuration trains with PP=8 + 1f1b (paper §2.2); this integration test
 runs its reduced variant through the actual PP executor with real MoE
 transformer stages and checks gradient equivalence with sequential
 execution."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

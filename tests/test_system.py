@@ -1,9 +1,6 @@
 """End-to-end behaviour tests: full launcher runs (data pipeline -> train ->
 checkpoint -> resume), dry-run roofline plumbing, serve loop."""
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
