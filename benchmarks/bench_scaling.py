@@ -263,6 +263,9 @@ def main(argv=None):
     # size (c_align=dp) while PP stages always run the c_align=1
     # dense-capacity path (see train/trainer.py), so its loss may differ
     # legitimately at batch shapes where the capacity rounding diverges.
+    # (moe_dispatch='dropless' removes that divergence — the pools become
+    # routing-independent — but this bench keeps the paper-default
+    # capacity dispatch.)
     pp_pts = [p for p in result["points"] if p["pp"] > 1]
     base = pp_pts[0]["loss"]
     for p in pp_pts:

@@ -21,6 +21,13 @@ Checks (kind auto-detected from the JSON shape):
   again, even if absolute times sit inside the tolerance band).
 * BENCH_epso — per-mode step times within tolerance; EPSO placed state
   bytes must stay strictly below SO (the paper's memory mechanism).
+* BENCH_moe — per-shape capacity/dropless step times within tolerance;
+  structurally, every dropless point must report zero drops AND conserve
+  all routed (token, expert) pairs, while the starved capacity points must
+  demonstrably drop (otherwise the dropless zero proves nothing). The
+  dropless/capacity wallclock ratio is only loosely bounded
+  (``--moe-ratio``): the CPU lowering of the ragged grouped matmul costs
+  ~E dense matmuls, a lowering artifact rather than the accelerator story.
 
 Step-time tolerance is deliberately loose (hardware varies across CI
 runners); the structural properties are the tight part of the gate.
@@ -96,6 +103,42 @@ def check_epso(fresh: dict, base: dict, tol: float) -> list:
     return errors
 
 
+def check_moe(fresh: dict, base: dict, tol: float, moe_ratio: float) -> list:
+    errors = []
+    base_pts = {p["shape"]: p for p in base.get("dispatch_points", [])}
+    for p in fresh.get("dispatch_points", []):
+        shape = p["shape"]
+        dl, cap = p["dropless"], p["capacity"]
+        # structural gates (the tight part): dropless never drops and
+        # accounts for every routed pair
+        if dl["drops"] != 0:
+            errors.append(f"moe {shape}: dropless reported "
+                          f"{dl['drops']} drops (must be 0)")
+        if dl["counts_sum"] != dl["routed_pairs"]:
+            errors.append(f"moe {shape}: dropless counts_sum "
+                          f"{dl['counts_sum']} != routed pairs "
+                          f"{dl['routed_pairs']}")
+        if cap["drops"] <= 0:
+            errors.append(f"moe {shape}: starved capacity point dropped "
+                          f"nothing — the dropless zero is untested")
+        # wallclock: loose in-run ratio + loose vs-baseline tolerance
+        if dl["step_time_ms"] > cap["step_time_ms"] * moe_ratio:
+            errors.append(
+                f"moe {shape}: dropless {dl['step_time_ms']:.1f}ms > "
+                f"{moe_ratio}x capacity {cap['step_time_ms']:.1f}ms")
+        b = base_pts.get(shape)
+        if b is None:
+            continue
+        for mode in ("capacity", "dropless"):
+            ft = p[mode]["step_time_ms"]
+            bt = b[mode]["step_time_ms"]
+            if ft > bt * tol:
+                errors.append(
+                    f"moe {shape} {mode}: fresh {ft:.1f}ms > {tol}x "
+                    f"baseline {bt:.1f}ms")
+    return errors
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True)
@@ -105,10 +148,17 @@ def main(argv=None):
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required shardmap-vs-masked speedup at the "
                          "largest fresh vocab point")
+    ap.add_argument("--moe-ratio", type=float, default=128.0,
+                    help="max dropless/capacity step-time ratio per moe "
+                         "dispatch point (loose: the ragged grouped-matmul "
+                         "lowering costs ~E dense matmuls)")
     args = ap.parse_args(argv)
 
     fresh, base = _load(args.fresh), _load(args.baseline)
-    if "executor_points" in fresh or "points" in fresh:
+    if "dispatch_points" in fresh:
+        errors = check_moe(fresh, base, args.tol, args.moe_ratio)
+        kind = "moe"
+    elif "executor_points" in fresh or "points" in fresh:
         errors = check_pp(fresh, base, args.tol, args.min_speedup)
         kind = "pp"
     elif "modes" in fresh:

@@ -31,6 +31,16 @@ class MoEConfig:
     # Stage 1 variant: 'allgather' (paper) | 'a2a' (beyond-paper, capacity-
     # bounded all-to-all dispatch)
     stage1: str = "allgather"
+    # dispatch mode: 'capacity' sizes the slot pool by capacity_factor and
+    # drops over-capacity tokens; 'dropless' sizes it for the worst-case
+    # routing so every (token, expert) pair is computed (no drops, exact
+    # naive-equal math independent of pool geometry / c_align).
+    dispatch: str = "capacity"
+
+    def __post_init__(self):
+        if self.dispatch not in ("capacity", "dropless"):
+            raise ValueError(f"MoEConfig.dispatch must be 'capacity' or "
+                             f"'dropless', got {self.dispatch!r}")
 
 
 @dataclass(frozen=True)
@@ -199,6 +209,11 @@ class ParallelConfig:
     # 'shardmap' needs a meshed 'pp' axis; off-mesh runs fall back to
     # 'masked' (the single-device PP simulation).
     pp_impl: str = "shardmap"       # shardmap | masked
+    # MoE dispatch override: None defers to MoEConfig.dispatch; 'capacity' /
+    # 'dropless' force that path in the step builder so every executor the
+    # step composes (plain, microbatched, both PP executors) runs one MoE
+    # dispatch mode.
+    moe_dispatch: Optional[str] = None
 
     def __post_init__(self):
         if self.pp_schedule not in ("gpipe", "1f1b"):
@@ -207,6 +222,9 @@ class ParallelConfig:
         if self.pp_impl not in ("shardmap", "masked"):
             raise ValueError(f"pp_impl must be 'shardmap' or 'masked', "
                              f"got {self.pp_impl!r}")
+        if self.moe_dispatch not in (None, "capacity", "dropless"):
+            raise ValueError(f"moe_dispatch must be None, 'capacity' or "
+                             f"'dropless', got {self.moe_dispatch!r}")
         if self.pp_stages < 1:
             raise ValueError(f"pp_stages must be >= 1, got {self.pp_stages}")
         if self.microbatches < 1:

@@ -18,16 +18,28 @@ Three execution paths (DESIGN §4), all computing the same math:
                static shapes — the TPU adaptation of the atomic-counter GPU
                kernels (DESIGN §3).
       Stage 4  expert computation: merged expert weights + grouped matmul
-               over a ragged-aligned slot pool (Pallas gmm or lax.ragged_dot).
+               over a ragged-aligned slot pool (Pallas gmm, or an
+               expert-masked batched contraction on the XLA path).
       Stage 5  output reduction: weighted combine of the K expert rows per
                token (Pallas combine kernel or XLA einsum), then
                psum_scatter over the EP axis.
 
-Dropless adaptation: routed-token buffers are static. ``capacity_factor``
-sizes a shared slot pool; per-expert group offsets are count-aligned, so
-imbalance is absorbed by the pool rather than per-expert truncation.
-cf >= E/K guarantees zero drops (correctness tests); FUR is dropless at
-cf >= 1.
+Dispatch modes (``MoEConfig.dispatch``): routed-token buffers are always
+static.
+
+* ``capacity`` — ``capacity_factor`` sizes a shared slot pool; per-expert
+  group offsets are count-aligned, so imbalance is absorbed by the pool
+  rather than per-expert truncation; tokens past the pool are dropped.
+  cf >= E/K guarantees zero drops; FUR is dropless at cf >= 1.
+* ``dropless`` — the pool is sized for the worst-case routing
+  (``dropless_pool_rows``: all T*K pairs to one expert still fit), groups
+  are always count-aligned ragged (the grouped-matmul layout), and the
+  result is exactly the naive math for ANY routing — independent of
+  capacity_factor and of pool-geometry knobs like ``c_align``, which is
+  what makes pp=1 and pp>1 losses bit-comparable at any batch shape.
+
+Every path reports ``MoeStats`` (per-expert activation counts + drop
+count) so the train step can surface routing telemetry.
 """
 from __future__ import annotations
 
@@ -129,6 +141,21 @@ class DispatchPlan(NamedTuple):
     drops: jax.Array         # scalar: number of dropped (over-capacity) pairs
 
 
+class MoeStats(NamedTuple):
+    """Per-layer routing telemetry. float32 (not int) so it rides through
+    vjp/scan/psum alongside the loss scalars with zero cotangents."""
+    counts: jax.Array        # (E,) routed (t, k) pairs per global expert
+    drops: jax.Array         # () pairs dropped over capacity (0 when dropless)
+
+    @classmethod
+    def zero(cls, num_experts: int) -> "MoeStats":
+        return cls(jnp.zeros((num_experts,), jnp.float32),
+                   jnp.zeros((), jnp.float32))
+
+    def __add__(self, other: "MoeStats") -> "MoeStats":
+        return MoeStats(self.counts + other.counts, self.drops + other.drops)
+
+
 def make_dispatch_plan(indices: jax.Array, *, num_experts: int,
                        pool_rows: int, align: int = 8,
                        expert_offset=0, local_experts: int = 0,
@@ -190,6 +217,15 @@ def pool_size(tokens: int, top_k: int, num_experts: int, local_experts: int,
                     local_experts, align)
 
 
+def dropless_pool_rows(tokens: int, top_k: int, local_experts: int,
+                       align: int = 8) -> int:
+    """Slot-pool rows guaranteeing zero drops for ANY routing: even if one
+    expert receives every local (t, k) pair its aligned group still fits,
+    and the ``align * EL`` slack absorbs per-group alignment padding
+    (each group rounds up by < align rows)."""
+    return round_up(tokens * top_k, align) + align * local_experts
+
+
 # ----------------------------------------------------------------------------
 # Stage 4: grouped expert FFN — XLA and Pallas backends
 # ----------------------------------------------------------------------------
@@ -201,8 +237,9 @@ def grouped_ffn(gate_w, up_w, down_w, pool_x, group_sizes, backend: str,
     backend 'pallas': ragged grouped-matmul kernels (paper Stage 4).
     backend 'xla'   : uniform-capacity batched einsum (GShard-style) —
                       reshape (EL, C, d); exact-FLOP XLA lowering.
-    backend 'ragged': lax.ragged_dot (CPU lowering costs it as EL dense
-                      matmuls; kept for comparison only).
+    backend 'ragged': count-ragged groups via an expert-masked batched
+                      contraction (costs EL dense matmuls, same as XLA's
+                      CPU lowering of lax.ragged_dot).
     """
     cons = constrain or (lambda x, n: x)
     if backend == "pallas":
@@ -213,11 +250,28 @@ def grouped_ffn(gate_w, up_w, down_w, pool_x, group_sizes, backend: str,
         h = checkpoint_name(h, "moe_hidden")
         return gmm(h, down_w.astype(pool_x.dtype), group_sizes)
     if backend == "ragged":
-        g = jax.lax.ragged_dot(pool_x, gate_w.astype(pool_x.dtype), group_sizes)
-        u = jax.lax.ragged_dot(pool_x, up_w.astype(pool_x.dtype), group_sizes)
+        # NOT lax.ragged_dot: XLA's SPMD partitioner rewrites ragged_dot's
+        # group_sizes operand into per-shard windows when the expert dim is
+        # sharded, and the rewritten values leak into every OTHER consumer
+        # of group_sizes (negative sizes -> phantom drops, diverged loss on
+        # any mesh with an ep/tp axis). A 0/1 expert mask partitions like
+        # any einsum and adds exact zeros, so the values are unchanged.
+        EL = gate_w.shape[0]
+        ends = jnp.cumsum(group_sizes)
+        e_row = jnp.searchsorted(ends, jnp.arange(pool_x.shape[0]),
+                                 side="right")          # slack rows -> EL
+        oh = jax.nn.one_hot(e_row, EL, dtype=pool_x.dtype)      # (M, EL)
+
+        def masked(h, w, sub):                          # h:(M,a) w:(EL,a,b)
+            return jnp.einsum(f"em{sub[-1]},me->m{sub[-1]}",
+                              jnp.einsum(f"m{sub[0]},e{sub}->em{sub[-1]}",
+                                         h, w.astype(pool_x.dtype)), oh)
+
+        g = masked(pool_x, gate_w, "df")
+        u = masked(pool_x, up_w, "df")
         h = jax.nn.silu(g) * u
         h = checkpoint_name(h, "moe_hidden")
-        return jax.lax.ragged_dot(h, down_w.astype(pool_x.dtype), group_sizes)
+        return masked(h, down_w, "fd")
     # 'xla': uniform capacity — (EL, C, d) batched matmul
     EL = gate_w.shape[0]
     M, d = pool_x.shape
@@ -238,13 +292,18 @@ def grouped_ffn(gate_w, up_w, down_w, pool_x, group_sizes, backend: str,
 def dispatch_compute_combine(gate_w, up_w, down_w, x, r: RouterOut, moe_cfg,
                              *, expert_offset=0, local_experts: int = 0,
                              backend: str = "xla", constrain=None,
-                             c_align: int = 1, pool_rows=None):
+                             c_align: int = 1, pool_rows=None,
+                             dropless: bool = False):
     """x: (T, d) tokens (already gathered under EP); expert weights are the
     *local* slices (EL experts). Returns (partial out (T, d), plan).
 
     ``c_align``: make the per-expert capacity C divisible by this (the
     batch-shard count, so the (EL, C, d) pool can shard its C dim).
-    ``pool_rows``: explicit slot-pool size (a2a path supplies its own)."""
+    ``pool_rows``: explicit slot-pool size (a2a path supplies its own).
+    ``dropless``: size the pool for the worst-case routing and use the
+    count-aligned ragged layout — no drops, and the pool geometry knobs
+    (capacity_factor, c_align, pool_rows) are ignored, so the result is
+    naive-exact regardless of executor."""
     T, d = x.shape
     K = moe_cfg.experts_per_token
     E = moe_cfg.num_experts
@@ -253,13 +312,22 @@ def dispatch_compute_combine(gate_w, up_w, down_w, x, r: RouterOut, moe_cfg,
     if backend == "pallas":
         from repro.kernels.ops import gmm_align
         align = gmm_align()   # Pallas gmm needs tile_m-aligned groups
-    rows = pool_rows if pool_rows is not None else \
-        pool_size(T, K, E, EL, moe_cfg.capacity_factor, align=align)
-    rows = round_up(rows, EL * align * max(c_align, 1))  # EL uniform groups
+    if dropless:
+        # worst-case pool; the uniform-capacity (EL, C, d) reshape cannot be
+        # statically dropless, so the XLA backend computes through the
+        # ragged (expert-masked) grouped matmul
+        rows = dropless_pool_rows(T, K, EL, align=align)
+        uniform = False
+    else:
+        rows = pool_rows if pool_rows is not None else \
+            pool_size(T, K, E, EL, moe_cfg.capacity_factor, align=align)
+        rows = round_up(rows, EL * align * max(c_align, 1))  # EL uniform groups
+        uniform = backend == "xla"
     plan = make_dispatch_plan(r.indices, num_experts=E, pool_rows=rows,
                               expert_offset=expert_offset, local_experts=EL,
-                              align=align,
-                              uniform_capacity=(backend == "xla"))
+                              align=align, uniform_capacity=uniform)
+    if dropless and backend == "xla":
+        backend = "ragged"
     if backend == "pallas":
         # Stage 2 on the Pallas path: histogram computed in-kernel; checked
         # against the plan's bincount by tests. (Same values; plan drives
@@ -294,25 +362,74 @@ def dispatch_compute_combine(gate_w, up_w, down_w, x, r: RouterOut, moe_cfg,
 # dense_capacity (no EP shard_map; pjit auto-shards)
 # ----------------------------------------------------------------------------
 
-def moe_dense_capacity(p, x, moe_cfg, backend: str = "xla", constrain=None,
-                       c_align: int = 1):
+def _moe_dense(p, x, moe_cfg, *, backend: str, constrain=None,
+               c_align: int = 1, dropless: bool = False):
+    """Shared core of the auto-sharded (no shard_map) paths. Returns
+    (out, router_out, MoeStats)."""
     r = route(x, p["router"], num_experts=moe_cfg.num_experts,
               top_k=moe_cfg.experts_per_token,
               forced_uniform=moe_cfg.forced_uniform_routing)
-    out, _ = dispatch_compute_combine(p["gate"], p["up"], p["down"], x, r,
-                                      moe_cfg, backend=backend,
-                                      constrain=constrain, c_align=c_align)
+    out, plan = dispatch_compute_combine(p["gate"], p["up"], p["down"], x, r,
+                                         moe_cfg, backend=backend,
+                                         constrain=constrain, c_align=c_align,
+                                         dropless=dropless)
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
+    stats = MoeStats(plan.counts.astype(jnp.float32),
+                     plan.drops.astype(jnp.float32))
+    return out, r, stats
+
+
+def moe_dense_capacity(p, x, moe_cfg, backend: str = "xla", constrain=None,
+                       c_align: int = 1):
+    out, r, _ = _moe_dense(p, x, moe_cfg, backend=backend,
+                           constrain=constrain, c_align=c_align)
     return out, r
+
+
+def moe_dropless(p, x, moe_cfg, backend: str = "xla", constrain=None):
+    """Dropless dispatch (tentpole): true per-expert counts feed the grouped
+    matmul's ragged ``group_sizes`` and the worst-case pool guarantees
+    stats.drops == 0 for any routing. Returns (out, router_out, MoeStats)."""
+    return _moe_dense(p, x, moe_cfg, backend=backend, constrain=constrain,
+                      dropless=True)
 
 
 # ----------------------------------------------------------------------------
 # fsmoe under EP: the five-stage pipeline inside shard_map
 # ----------------------------------------------------------------------------
 
+def _fsmoe_stats(plan_counts, drops, *, ep_axis, batch_axes, manual,
+                 extra_drops=None):
+    """Global MoeStats from one EP rank's dispatch plan.
+
+    counts: each rank holds its (EL,) local-expert histogram over the
+    ep-gathered tokens — all_gather over ep concatenates them into the
+    global (E,) vector (rank order == expert order), then token-partitioning
+    axes (batch) psum and token-replicating axes (expert-TP) pmean.
+    drops: psum over ep (each rank drops its own experts' overflow) and over
+    batch axes; pmean over replicating axes — NOT psum over everything,
+    which would multiply-count drops under expert-TP."""
+    counts = jax.lax.all_gather(plan_counts.astype(jnp.float32), ep_axis,
+                                tiled=True)
+    drops = drops.astype(jnp.float32)
+    if extra_drops is not None:
+        drops = drops + extra_drops.astype(jnp.float32)
+    drops = jax.lax.psum(drops, ep_axis)
+    for ax in manual:
+        if ax == ep_axis:
+            continue
+        if ax in batch_axes:
+            counts = jax.lax.psum(counts, ax)
+            drops = jax.lax.psum(drops, ax)
+        else:
+            counts = jax.lax.pmean(counts, ax)
+            drops = jax.lax.pmean(drops, ax)
+    return MoeStats(counts, drops)
+
+
 def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
-                 batch_axes=("data",), tp_axis=None):
+                 batch_axes=("data",), tp_axis=None, dropless: bool = False):
     """Paper Algorithm 1 under EP. Tokens x: (N, d) sharded over
     (batch_axes..., ep_axis) on dim 0; expert weights sharded over ep_axis on
     the stacked expert dim. The body is fully manual so the dispatch sort
@@ -340,6 +457,11 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
         raise ValueError(
             f"expert d_ff={moe_cfg.d_ff_expert} not divisible by "
             f"tp={mesh.shape[tp_axis]} (axis {tp_axis!r})")
+    if dropless and moe_cfg.stage1 == "a2a":
+        raise ValueError(
+            "dispatch='dropless' does not compose with stage1='a2a': the "
+            "all-to-all send buffers are capacity-bounded by construction. "
+            "Use the allgather Stage 1 (stage1='allgather') for dropless.")
     # manual over ALL mesh axes: leaving an axis (e.g. 'pod') auto at the
     # shard_map boundary trips an XLA SPMD repartitioning bug ("Invalid
     # binary instruction opcode copy") on multi-pod meshes.
@@ -354,7 +476,8 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
                     "stage1='a2a' does not compose with expert-TP yet; use "
                     "the allgather Stage 1 for ep x tp plans")
             return _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg,
-                                   ep_axis=ep_axis, ep=ep, manual=manual)
+                                   ep_axis=ep_axis, ep=ep, manual=manual,
+                                   batch_axes=batch_axes)
         # Router on local tokens (router replicated — paper §3.1).
         r = route(xl, router_w, num_experts=E,
                   top_k=moe_cfg.experts_per_token,
@@ -369,7 +492,7 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
         out_partial, plan = dispatch_compute_combine(
             gate, up, down, x_g, r_g, moe_cfg,
             expert_offset=rank * EL, local_experts=EL,
-            backend=stage45_backend(moe_cfg))
+            backend=stage45_backend(moe_cfg), dropless=dropless)
         if tp_axis is not None:
             # expert-TP: sum the per-d_ff-shard partial outputs (the combine
             # is linear in the expert rows, so summing after it is exact)
@@ -382,22 +505,21 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
         for ax in manual:
             aux = jax.lax.pmean(aux, ax)
             z = jax.lax.pmean(z, ax)
-        drops = plan.drops
-        for ax in manual:
-            drops = jax.lax.psum(drops, ax)
-        return out_local, aux, z, drops
+        stats = _fsmoe_stats(plan.counts, plan.drops, ep_axis=ep_axis,
+                             batch_axes=batch_axes, manual=manual)
+        return out_local, aux, z, stats
 
-    out, aux, z, drops = jax.shard_map(
+    out, aux, z, stats = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
                   P(ep_axis, tp_axis, None), token_spec),
-        out_specs=(token_spec, P(), P(), P()),
+        out_specs=(token_spec, P(), P(), MoeStats(P(None), P())),
         axis_names=manual)(
             p["router"], p["gate"], p["up"], p["down"], x)
     out = checkpoint_name(out, "moe_out")
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
-    return out, RouterOut(None, None, aux, z), drops
+    return out, RouterOut(None, None, aux, z), stats
 
 
 # ----------------------------------------------------------------------------
@@ -405,7 +527,7 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
 # ----------------------------------------------------------------------------
 
 def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
-                    manual):
+                    manual, batch_axes=()):
     """Capacity-bounded all-to-all dispatch (EXPERIMENTS §Perf, dbrx
     hillclimb). The paper sends *all* tokens to *all* EP ranks (allgather,
     chosen because oneCCL's allgather beats its irregular all-to-all). On
@@ -464,7 +586,7 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
     # same capacity slack
     inner_pool = round_up(int(math.ceil(
         moe_cfg.capacity_factor * T_loc * K)), 8)
-    out_rows, _ = dispatch_compute_combine(
+    out_rows, inner_plan = dispatch_compute_combine(
         gate, up, down, recv_x, r2, inner_cfg, expert_offset=0,
         local_experts=EL, backend=stage45_backend(moe_cfg),
         pool_rows=inner_pool)
@@ -479,10 +601,13 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
     for ax in manual:
         aux = jax.lax.pmean(aux, ax)
         z = jax.lax.pmean(z, ax)
-    drops = plan.drops
-    for ax in manual:
-        drops = jax.lax.psum(drops, ax)
-    return out_local, aux, z, drops
+    # send-side capacity drops (outer plan) + receive-side pool overflow
+    # (inner plan); counts come from the received rows each rank dispatched
+    # among its local experts
+    stats = _fsmoe_stats(inner_plan.counts, plan.drops, ep_axis=ep_axis,
+                         batch_axes=batch_axes, manual=manual,
+                         extra_drops=inner_plan.drops)
+    return out_local, aux, z, stats
 
 
 # ----------------------------------------------------------------------------
@@ -490,7 +615,7 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
 # ----------------------------------------------------------------------------
 
 def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
-                      batch_axes=("data",)):
+                      batch_axes=("data",), dropless: bool = False):
     """Beyond-paper optimization (EXPERIMENTS §Perf, mixtral hillclimb).
 
     When E < the model-axis size (mixtral: 8 experts on a 16-way axis), the
@@ -513,26 +638,39 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
         r = route(xl, router_w, num_experts=moe_cfg.num_experts,
                   top_k=moe_cfg.experts_per_token,
                   forced_uniform=moe_cfg.forced_uniform_routing)
-        out_partial, _ = dispatch_compute_combine(
-            gate, up, down, xl, r, moe_cfg, backend="xla")
+        out_partial, plan = dispatch_compute_combine(
+            gate, up, down, xl, r, moe_cfg, backend="xla",
+            dropless=dropless)
         out = jax.lax.psum(out_partial, tp_axis)
         aux, z = r.aux_loss, r.z_loss
         for ax in manual:
             aux = jax.lax.pmean(aux, ax)
             z = jax.lax.pmean(z, ax)
-        return out, aux, z
+        # all E experts are local here (EP=1): counts/drops are per token
+        # shard — psum over token-partitioning axes, pmean over replicating
+        # ones (every tp rank ran the identical dispatch)
+        counts = plan.counts.astype(jnp.float32)
+        drops = plan.drops.astype(jnp.float32)
+        for ax in manual:
+            if ax in batch_axes:
+                counts = jax.lax.psum(counts, ax)
+                drops = jax.lax.psum(drops, ax)
+            else:
+                counts = jax.lax.pmean(counts, ax)
+                drops = jax.lax.pmean(drops, ax)
+        return out, aux, z, MoeStats(counts, drops)
 
-    out, aux, z = jax.shard_map(
+    out, aux, z, stats = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(None, None, tp_axis), P(None, None, tp_axis),
                   P(None, tp_axis, None), token_spec),
-        out_specs=(token_spec, P(), P()),
+        out_specs=(token_spec, P(), P(), MoeStats(P(None), P())),
         axis_names=manual)(
             p["router"], p["gate"], p["up"], p["down"], x)
     out = checkpoint_name(out, "moe_out")
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
-    return out, RouterOut(None, None, aux, z)
+    return out, RouterOut(None, None, aux, z), stats
 
 
 # ----------------------------------------------------------------------------
@@ -542,27 +680,33 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
 def sparse_moe_block(p, x, cfg, *, mesh=None, ep_axis: str = "model",
                      batch_axes=("data",), constrain=None, c_align: int = 1,
                      tp_mesh=None, tp_axis=None):
-    """x: (B, S, d) -> (out (B,S,d), aux_loss, z_loss). ``tp_axis`` (a plan
+    """x: (B, S, d) -> (out (B,S,d), aux_loss, z_loss, MoeStats). The
+    dispatch mode comes from ``cfg.moe.dispatch``; ``tp_axis`` (a plan
     mesh's dedicated TP axis) composes expert-TP with the EP shard_map."""
     B, S, d = x.shape
     m = cfg.moe
+    dropless = m.dispatch == "dropless"
     xt = x.reshape(B * S, d)
     if m.moe_impl == "naive":
         out, r = moe_naive(p, xt, m)
-        return out.reshape(B, S, d), r.aux_loss, r.z_loss
+        one_hot = jax.nn.one_hot(r.indices, m.num_experts, dtype=jnp.float32)
+        stats = MoeStats(one_hot.sum((0, 1)), jnp.zeros((), jnp.float32))
+        return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
     use_ep = (m.moe_impl == "fsmoe" and mesh is not None
               and ep_axis in mesh.shape
               and m.num_experts % mesh.shape[ep_axis] == 0)
     if use_ep:
-        out, r, _drops = moe_fsmoe_ep(p, xt, m, mesh=mesh, ep_axis=ep_axis,
-                                      batch_axes=batch_axes, tp_axis=tp_axis)
-        return out.reshape(B, S, d), r.aux_loss, r.z_loss
+        out, r, stats = moe_fsmoe_ep(p, xt, m, mesh=mesh, ep_axis=ep_axis,
+                                     batch_axes=batch_axes, tp_axis=tp_axis,
+                                     dropless=dropless)
+        return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
     if m.etp_shard_map and tp_mesh is not None:
-        out, r = moe_etp_shard_map(p, xt, m, mesh=tp_mesh,
-                                   tp_axis=tp_axis or "model",
-                                   batch_axes=batch_axes)
-        return out.reshape(B, S, d), r.aux_loss, r.z_loss
+        out, r, stats = moe_etp_shard_map(p, xt, m, mesh=tp_mesh,
+                                          tp_axis=tp_axis or "model",
+                                          batch_axes=batch_axes,
+                                          dropless=dropless)
+        return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
     backend = stage45_backend(m) if m.moe_impl == "fsmoe" else "xla"
-    out, r = moe_dense_capacity(p, xt, m, backend=backend,
-                                constrain=constrain, c_align=c_align)
-    return out.reshape(B, S, d), r.aux_loss, r.z_loss
+    out, r, stats = _moe_dense(p, xt, m, backend=backend, constrain=constrain,
+                               c_align=c_align, dropless=dropless)
+    return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats

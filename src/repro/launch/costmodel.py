@@ -377,8 +377,8 @@ def _analyze_decode(cfg, acc, rules, mesh, shape, cd):
             x2 = L.apply_norm(lp["ln2"], h, cfg.norm)
             if at == "moe":
                 from repro.core import moe as moe_lib
-                mo, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg,
-                                                    mesh=None)
+                mo, _, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg,
+                                                       mesh=None)
                 return h + mo, kv2
             return h + L.apply_mlp(lp["mlp"], x2, cfg.mlp_activation), kv2
 

@@ -190,6 +190,7 @@ def print_parallel_plan(spec: str, arch: str, *, global_batch: int = 256,
     from repro.parallel.plan import ParallelPlan
     cfg = get_config(arch)
     pplan = ParallelPlan.parse(spec)
+    cfg = pplan.apply_to_model(cfg)   # moe= in the spec pins the dispatch
     plan = pplan.resolve(cfg, train_cfg, global_batch=global_batch)
     text = plan.describe(cfg)
     print(f"== resolved plan for {arch} (global_batch={global_batch}) ==")

@@ -104,7 +104,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
         parallel: str = None,
         opt_shard: str = None, pp_schedule: str = None,
-        pp_impl: str = None,
+        pp_impl: str = None, moe_dispatch: str = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
@@ -145,14 +145,25 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             pplan = dataclasses.replace(pplan, pp_schedule=pp_schedule)
         if pp_impl is not None:
             pplan = dataclasses.replace(pplan, pp_impl=pp_impl)
+        if moe_dispatch is not None:
+            pplan = dataclasses.replace(pplan, moe_dispatch=moe_dispatch)
     elif mesh:
         pplan = ParallelPlan.from_legacy(mesh, cfg=cfg,
                                          opt_shard=opt_shard or "none",
                                          pp_schedule=pp_schedule or "1f1b")
         if pp_impl is not None:
             pplan = dataclasses.replace(pplan, pp_impl=pp_impl)
+        if moe_dispatch is not None:
+            pplan = dataclasses.replace(pplan, moe_dispatch=moe_dispatch)
     else:
         pplan = None
+    # one MoE dispatch path everywhere: fold the plan-pinned (or --moe-
+    # dispatch) mode into the model config before anything resolves on it
+    if pplan is not None:
+        cfg = pplan.apply_to_model(cfg)
+    elif moe_dispatch is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch=moe_dispatch))
     opt_shard = pplan.opt_shard if pplan is not None else (opt_shard
                                                            or "none")
 
@@ -196,7 +207,9 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     par = ParallelConfig(microbatches=microbatches, remat_policy=sac,
                          optimizer_sharding=opt_shard,
                          pp_stages=pp_stages, pp_schedule=pp_schedule,
-                         pp_impl=pp_impl)
+                         pp_impl=pp_impl,
+                         moe_dispatch=pplan.moe_dispatch
+                         if pplan is not None else moe_dispatch)
 
     state = init_state(jax.random.PRNGKey(seed), cfg, train, plan=plan,
                        opt_sharding_mode=opt_shard)
@@ -275,10 +288,19 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             per_rank = [loss, float("nan")]
         history[step] = {"step": step, "loss": loss,
                          "lr": float(metrics["lr"]), "grad_norm": gnorm}
+        moe_line = ""
+        if "moe_drops" in metrics:     # per-expert routing telemetry
+            drops = float(metrics["moe_drops"])
+            load = np.asarray(metrics["moe_load"])
+            history[step]["moe_drops"] = drops
+            history[step]["moe_load_max"] = float(load.max()) if load.size \
+                else 0.0
+            moe_line = (f" drops {drops:.0f} "
+                        f"load_max {history[step]['moe_load_max']:.3f}")
         if step % log_every == 0 or step == steps - 1:
             dt = time.time() - t0
             print(f"step {step:5d} loss {loss:.4f} gnorm {gnorm:.3f} "
-                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+                  f"lr {float(metrics['lr']):.2e}{moe_line} ({dt:.1f}s)")
         return state, {"loss": loss, "per_rank_losses": per_rank,
                        "per_rank_grad_norms": [gnorm]}
 
@@ -301,6 +323,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     summary = {"arch": cfg.name, "steps": end_step, "mesh": mesh,
                "parallel": str(pplan) if pplan is not None else None,
                "opt_shard": opt_shard, "pp_stages": pp_stages,
+               "moe_dispatch": cfg.moe.dispatch if cfg.moe is not None
+               else None,
                "pp_schedule": pp_schedule if pp_stages > 1 else None,
                "pp_impl": pp_impl if pp_stages > 1 else None,
                "relaunches": relaunches,
@@ -336,7 +360,8 @@ def main():
                     help="declarative ParallelPlan spec, e.g. "
                          "'dp=2,pp=2,ep=2' or 'dp=2,ep=2,tp=2' (expert-TP); "
                          "axes: dp, pp, ep, tp, pod; options: opt=, "
-                         "schedule=, mb=, fsdp. Forces the device product "
+                         "schedule=, moe=, mb=, fsdp. Forces the device "
+                         "product "
                          "as CPU host devices; pp>1 enables the jitted "
                          "pipeline schedule")
     ap.add_argument("--mesh", default=None,
@@ -362,6 +387,17 @@ def main():
                          "vocab-sized head+CE; 'masked' is the legacy "
                          "single-program SPMD executor. Overrides a "
                          "--parallel spec's impl= option")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["capacity", "dropless"],
+                    help="MoE token dispatch: 'capacity' (slot pool sized by "
+                         "capacity_factor, over-capacity tokens dropped) or "
+                         "'dropless' (pool sized for the worst-case routing, "
+                         "no drops, naive-exact math). Overrides both the "
+                         "model's MoEConfig.dispatch and a --parallel spec's "
+                         "moe= option")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print the step line (loss/gnorm/lr + MoE routing "
+                         "telemetry: drops, max expert load) every N steps")
     ap.add_argument("--n-buffer", type=int, default=2,
                     help="buffer nodes for hard-failure replacement")
     ap.add_argument("--inject-hard-at", type=int, default=None,
@@ -378,8 +414,8 @@ def main():
         ckpt_interval=args.ckpt_interval, mesh=args.mesh,
         parallel=args.parallel,
         opt_shard=args.opt_shard, pp_schedule=args.pp_schedule,
-        pp_impl=args.pp_impl,
-        n_buffer=args.n_buffer,
+        pp_impl=args.pp_impl, moe_dispatch=args.moe_dispatch,
+        log_every=args.log_every, n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,
         inject_soft_at=args.inject_soft_at)
 

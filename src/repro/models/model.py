@@ -180,9 +180,9 @@ def _moe_block(lp, h, cfg, rules, sac: str, mesh):
         batch_axes=batch_axes, constrain=cons,
         c_align=c_align, tp_mesh=tp_mesh, tp_axis=tp_axis), "moe", sac)
     h = h + attn(lp["attn"], L.apply_norm(lp["ln1"], h, cfg.norm))
-    mo, aux, z = moe(lp["moe"], L.apply_norm(lp["ln2"], h, cfg.norm))
+    mo, aux, z, stats = moe(lp["moe"], L.apply_norm(lp["ln2"], h, cfg.norm))
     h = h + mo
-    return cons(h, "act_btd"), aux, z
+    return cons(h, "act_btd"), aux, z, stats
 
 
 def _ssm_block(lp, h, cfg, rules, sac: str):
@@ -218,19 +218,21 @@ def _scan_layers(stacked, h, body, sac: str):
     return h
 
 
-def _scan_layers_aux(stacked, h, body, sac: str):
-    """Like _scan_layers but body returns (h, aux, z) — aux accumulated."""
+def _scan_layers_aux(stacked, h, body, sac: str, num_experts: int):
+    """Like _scan_layers but body returns (h, aux, z, MoeStats) — aux
+    losses and routing telemetry accumulated (summed) across layers."""
     fn = block_remat(body, sac)
 
     def step(carry, lp):
-        h, aux, z = carry
-        h, a, zz = fn(lp, h)
-        return (h, aux + a, z + zz), None
+        h, aux, z, st = carry
+        h, a, zz, s = fn(lp, h)
+        return (h, aux + a, z + zz, st + s), None
 
-    (h, aux, z), _ = jax.lax.scan(
-        step, (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+    (h, aux, z, st), _ = jax.lax.scan(
+        step, (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               moe_lib.MoeStats.zero(num_experts)),
         stacked)
-    return h, aux, z
+    return h, aux, z, st
 
 
 # ----------------------------------------------------------------------------
@@ -271,10 +273,12 @@ def forward(params, batch: dict, cfg: ModelConfig, *,
                              lambda lp, hh: _dense_block(lp, hh, cfg, rules, sac),
                              sac)
         elif at == "moe":
-            h, a, z = _scan_layers_aux(
+            h, a, z, st = _scan_layers_aux(
                 params["layers"], h,
-                lambda lp, hh: _moe_block(lp, hh, cfg, rules, sac, mesh), sac)
+                lambda lp, hh: _moe_block(lp, hh, cfg, rules, sac, mesh), sac,
+                cfg.moe.num_experts)
             aux["moe_aux"], aux["moe_z"] = a, z
+            aux["moe_stats"] = st
         elif at == "ssm":
             h = _scan_layers(params["layers"], h,
                              lambda lp, hh: _ssm_block(lp, hh, cfg, rules, sac),
@@ -339,6 +343,12 @@ def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
         total = total + cfg.moe.router_z_coef * aux["moe_z"] / cfg.num_layers
     metrics = {"ce": ce, "moe_aux": aux["moe_aux"] / max(cfg.num_layers, 1),
                "moe_z": aux["moe_z"] / max(cfg.num_layers, 1), "ntok": ntok}
+    if "moe_stats" in aux:
+        st = aux["moe_stats"]
+        counts = st.counts / max(cfg.num_layers, 1)   # per-layer mean -> T*K
+        metrics["moe_counts"] = counts
+        metrics["moe_load"] = counts / jnp.maximum(counts.sum(), 1.0)
+        metrics["moe_drops"] = st.drops               # summed over layers
     return total, metrics
 
 
@@ -362,9 +372,9 @@ def pipeline_stage_forward(stage_lp, h, cfg: ModelConfig, *, sac: str = ""):
     the pp stage slices back-to-back reproduces the sequential model
     bit-for-bit. Blocks run without sharding-rule constraints (the PP
     executor pins placement at stage granularity instead); MoE stages
-    therefore always take the auto-shardable dense-capacity path
-    (``c_align=1``), never the EP shard_map path. Returns
-    (h, moe_aux, moe_z)."""
+    therefore always take the auto-shardable dense path (``c_align=1``,
+    capacity or dropless per ``cfg.moe.dispatch``), never the EP shard_map
+    path. Returns (h, moe_aux, moe_z, MoeStats)."""
     at = cfg.arch_type
     if at not in PP_ARCH_TYPES:
         raise ValueError(
@@ -373,7 +383,8 @@ def pipeline_stage_forward(stage_lp, h, cfg: ModelConfig, *, sac: str = ""):
     if at == "moe":
         return _scan_layers_aux(
             stage_lp, h,
-            lambda lp, hh: _moe_block(lp, hh, cfg, None, sac, None), sac)
+            lambda lp, hh: _moe_block(lp, hh, cfg, None, sac, None), sac,
+            cfg.moe.num_experts)
     if at == "dense":
         h = _scan_layers(stage_lp, h,
                          lambda lp, hh: _dense_block(lp, hh, cfg, None, sac),
@@ -382,7 +393,8 @@ def pipeline_stage_forward(stage_lp, h, cfg: ModelConfig, *, sac: str = ""):
         h = _scan_layers(stage_lp, h,
                          lambda lp, hh: _ssm_block(lp, hh, cfg, None, sac),
                          sac)
-    return h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+    return (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            moe_lib.MoeStats.zero(0))
 
 
 def lm_head_ce(params, h, labels, cfg: ModelConfig):
@@ -456,8 +468,8 @@ def decode_step(params, tokens, cache: dict, index, cfg: ModelConfig, *,
             hh, kv2 = attn_step(lp, hh, kv)
             x2 = L.apply_norm(lp["ln2"], hh, cfg.norm)
             if at == "moe":
-                mo, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg,
-                                                    mesh=None)
+                mo, _, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg,
+                                                       mesh=None)
                 hh = hh + mo
             else:
                 hh = hh + L.apply_mlp(lp["mlp"], x2, cfg.mlp_activation, cons)
@@ -584,7 +596,8 @@ def prefill_with_cache(params, tokens, cache: dict, slots, lengths,
             # single-host capacity path, matching decode_step; ``mesh`` is
             # accepted for signature parity but EP dispatch is not wired
             # into serving yet (multi-host serve is a ROADMAP item)
-            mo, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg, mesh=None)
+            mo, _, _, _ = moe_lib.sparse_moe_block(lp["moe"], x2, cfg,
+                                                   mesh=None)
             hh = hh + mo
         else:
             hh = hh + L.apply_mlp(lp["mlp"], x2, cfg.mlp_activation, cons)

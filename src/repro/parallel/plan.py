@@ -147,6 +147,7 @@ _AXIS_KEYS = tuple(k for k, _ in AXES)
 _OPT_MODES = ("none", "so", "epso")
 _PP_SCHEDULES = ("gpipe", "1f1b")
 _PP_IMPLS = ("shardmap", "masked")
+_MOE_DISPATCH = ("capacity", "dropless")
 
 
 @dataclass(frozen=True)
@@ -162,6 +163,9 @@ class ParallelPlan:
     pp_impl: str = "shardmap"        # shardmap (per-stage programs) | masked
     microbatches: int = 1
     fsdp: bool = False
+    # MoE dispatch the plan pins across train/serve/dryrun/checkpoints:
+    # None defers to the model's MoEConfig.dispatch
+    moe_dispatch: Optional[str] = None   # None | capacity | dropless
     kernel: KernelPlan = field(default_factory=KernelPlan)
 
     def __post_init__(self):
@@ -179,6 +183,10 @@ class ParallelPlan:
         if self.pp_impl not in _PP_IMPLS:
             raise ValueError(f"pp_impl must be one of {_PP_IMPLS}, "
                              f"got {self.pp_impl!r}")
+        if self.moe_dispatch is not None and \
+                self.moe_dispatch not in _MOE_DISPATCH:
+            raise ValueError(f"moe_dispatch must be None or one of "
+                             f"{_MOE_DISPATCH}, got {self.moe_dispatch!r}")
 
     # ---- spec string <-> plan ------------------------------------------------
     @classmethod
@@ -225,6 +233,8 @@ class ParallelPlan:
                 put("pp_schedule", v)
             elif k in ("impl", "pp_impl"):
                 put("pp_impl", v)
+            elif k in ("moe", "moe_dispatch"):
+                put("moe_dispatch", v)
             elif k == "fsdp":
                 put("fsdp", v not in ("0", "false", "False"))
             else:
@@ -232,7 +242,8 @@ class ParallelPlan:
                     f"unknown role {k!r} in parallel spec {spec!r}; valid "
                     f"axes: {', '.join(_AXIS_KEYS)}; options: opt={{none|so|"
                     f"epso}}, schedule={{gpipe|1f1b}}, "
-                    f"impl={{shardmap|masked}}, mb=<int>, fsdp")
+                    f"impl={{shardmap|masked}}, moe={{capacity|dropless}}, "
+                    f"mb=<int>, fsdp")
         kw.update(overrides)
         return cls(**kw)
 
@@ -250,6 +261,8 @@ class ParallelPlan:
             parts.append(f"schedule={self.pp_schedule}")
         if self.pp_impl != "shardmap":
             parts.append(f"impl={self.pp_impl}")
+        if self.moe_dispatch is not None:
+            parts.append(f"moe={self.moe_dispatch}")
         if self.microbatches != 1:
             parts.append(f"mb={self.microbatches}")
         if self.fsdp:
@@ -292,6 +305,19 @@ class ParallelPlan:
         dropped (a plan that is all ones has no mesh)."""
         return tuple((name, getattr(self, key)) for key, name in AXES
                      if getattr(self, key) > 1)
+
+    def apply_to_model(self, cfg):
+        """Fold plan-pinned model options into ``cfg``. Today that is the MoE
+        dispatch mode: ``moe=...`` in the spec overrides ``MoEConfig.dispatch``
+        so every consumer of the plan (train, serve, dryrun, checkpoints)
+        agrees on one path. Returns ``cfg`` unchanged when nothing is pinned
+        or the model has no MoE block."""
+        import dataclasses
+        if (self.moe_dispatch is None or getattr(cfg, "moe", None) is None
+                or cfg.moe.dispatch == self.moe_dispatch):
+            return cfg
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=self.moe_dispatch))
 
     # ---- resolution ----------------------------------------------------------
     def validate_model(self, cfg) -> None:
@@ -420,7 +446,8 @@ class ResolvedPlan:
                               optimizer_sharding=self.opt_shard,
                               pp_stages=self.pp_stages,
                               pp_schedule=self.pp_schedule,
-                              pp_impl=self.pp_impl)
+                              pp_impl=self.pp_impl,
+                              moe_dispatch=self.plan.moe_dispatch)
 
     # ---- checkpoint metadata -------------------------------------------------
     def layout_signature(self) -> dict:

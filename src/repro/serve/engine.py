@@ -51,10 +51,14 @@ def dropless_cfg(cfg: ModelConfig) -> ModelConfig:
     which other rows share the batch — a request's output would change with
     batch composition. Raise the capacity factor to the dropless bound for
     the serve lowerings (decode batches are small; the extra pool rows are
-    noise next to the KV cache)."""
+    noise next to the KV cache). A ``dispatch='dropless'`` config is already
+    batching-transparent by construction — its pool is sized for the
+    worst-case routing at any capacity_factor — so it passes through."""
     if not cfg.is_moe:
         return cfg
     m = cfg.moe
+    if m.dispatch == "dropless":
+        return cfg
     need = m.num_experts / max(m.experts_per_token, 1)
     if m.capacity_factor >= need:
         return cfg

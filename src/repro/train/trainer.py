@@ -15,6 +15,7 @@ engine's admission path).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
@@ -139,6 +140,12 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
                              "resolved plan")
         parallel = plan.parallel_config()
     kplan = plan.kernel if plan is not None else None
+    if (parallel.moe_dispatch is not None and cfg.moe is not None
+            and cfg.moe.dispatch != parallel.moe_dispatch):
+        # ParallelConfig is authoritative in the step builder, so every
+        # executor the step composes runs one MoE dispatch mode
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch=parallel.moe_dispatch))
     rules = _resolve_rules(cfg, train, rules, mesh)
     if mesh is None and rules is not None:
         mesh = rules.mesh
@@ -193,13 +200,20 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
             return embed_tokens(io, mb["tokens"], cfg, compute_dtype=cd)
 
         def block_fn(lp, h, mb):
-            # NOTE: PP stages run the MoE dense-capacity path (c_align=1),
-            # not the non-PP EP shard_map variant — GSPMD still shards the
-            # expert compute via the param placement, but capacity behavior
-            # matches the single-device reference (the parity tests' basis)
-            h, aux, z = pipeline_stage_forward(lp, h, cfg,
-                                               sac=parallel.remat_policy)
-            return h, {"aux": aux, "z": z}
+            # NOTE: PP stages run the MoE dense path (c_align=1), not the
+            # non-PP EP shard_map variant — GSPMD still shards the expert
+            # compute via the param placement. Under dispatch='capacity'
+            # the pool geometry matches the single-device reference but may
+            # differ from an on-mesh non-PP step (c_align=dp) at shapes
+            # that overflow; dispatch='dropless' is geometry-independent,
+            # which closes that parity gap.
+            h, aux, z, stats = pipeline_stage_forward(
+                lp, h, cfg, sac=parallel.remat_policy)
+            scal = {"aux": aux, "z": z}
+            if cfg.is_moe:
+                scal["counts"] = stats.counts
+                scal["drops"] = stats.drops
+            return h, scal
 
         def head_fn(io, h, mb):
             return lm_head_ce(io, h, mb["labels"], cfg)
@@ -210,6 +224,11 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
         cots = {"ce": (jnp.arange(pp) == pp - 1).astype(jnp.float32),
                 "aux": jnp.full((pp,), ca / nl, jnp.float32),
                 "z": jnp.full((pp,), cz / nl, jnp.float32)}
+        if cfg.is_moe:
+            # telemetry channels: zero cotangents (counts/drops are derived
+            # from integer routing decisions — no gradient flows through)
+            cots["counts"] = jnp.zeros((pp, cfg.moe.num_experts), jnp.float32)
+            cots["drops"] = jnp.zeros((pp,), jnp.float32)
         mb_b = batch["tokens"].shape[0] // n_mb
         seq = batch["tokens"].shape[1]
         baxes = tuple(rules.batch_axes) if rules is not None else ()
@@ -238,7 +257,15 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
         aux = ssum["aux"].sum() / n_mb
         z = ssum["z"].sum() / n_mb
         loss = ce + (ca * aux + cz * z) / nl
-        return loss, {"ce": ce}, grads
+        metrics = {"ce": ce}
+        if cfg.is_moe:
+            # sum over stages = sum over all layers and microbatches; the
+            # per-layer mean makes counts sum to the whole-step T*K
+            counts = ssum["counts"].sum(axis=0) / nl
+            metrics["moe_counts"] = counts
+            metrics["moe_load"] = counts / jnp.maximum(counts.sum(), 1.0)
+            metrics["moe_drops"] = ssum["drops"].sum()
+        return loss, metrics, grads
 
     def _train_step(state: TrainState, batch: dict):
         params = state.params
@@ -247,6 +274,11 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
             loss, metrics, grads = pp_loss_and_grads(params, batch)
         elif nmb > 1:
             mbs = split_mb(batch, nmb)
+            m0 = {"ce": jnp.zeros(())}
+            if cfg.is_moe:
+                m0["moe_counts"] = jnp.zeros((cfg.moe.num_experts,),
+                                             jnp.float32)
+                m0["moe_drops"] = jnp.zeros((), jnp.float32)
 
             def acc_step(carry, mb):
                 gacc, lacc, macc = carry
@@ -254,15 +286,23 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
                     loss_for, has_aux=True)(params, mb)
                 gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
                                     gacc, grads)
-                return (gacc, lacc + loss, macc + metrics["ce"]), None
+                macc = {k: macc[k] + metrics[k] for k in macc}
+                return (gacc, lacc + loss, macc), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               params)
-            (grads, loss, ce), _ = jax.lax.scan(
-                acc_step, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            (grads, loss, macc), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros(()), m0), mbs)
             grads = jax.tree.map(lambda g: g / nmb, grads)
-            loss, ce = loss / nmb, ce / nmb
-            metrics = {"ce": ce}
+            loss = loss / nmb
+            metrics = {"ce": macc["ce"] / nmb}
+            if cfg.is_moe:
+                # counts/drops are totals, not means: summed over
+                # microbatches they cover the whole global batch
+                counts = macc["moe_counts"]
+                metrics["moe_counts"] = counts
+                metrics["moe_load"] = counts / jnp.maximum(counts.sum(), 1.0)
+                metrics["moe_drops"] = macc["moe_drops"]
         else:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_for, has_aux=True)(params, batch)

@@ -47,7 +47,7 @@ def test_fsmoe_ep_matches_naive_with_grads(mesh8):
                           p, pspec)
         xs = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None)))
         def f(p, x):
-            out, r, drops = M.moe_fsmoe_ep(p, x, cfg.moe, mesh=mesh)
+            out, r, stats = M.moe_fsmoe_ep(p, x, cfg.moe, mesh=mesh)
             return out
         out = jax.jit(f)(ps, xs)
         assert np.allclose(ref, out, atol=1e-4), "forward mismatch"
@@ -90,10 +90,11 @@ def test_fsmoe_a2a_dispatch_matches_naive(mesh8):
                           p, pspec)
         xs = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None)))
         def f(p, x):
-            out, r, drops = M.moe_fsmoe_ep(p, x, cfg.moe, mesh=mesh)
-            return out, drops
-        out, drops = jax.jit(f)(ps, xs)
-        assert int(drops) == 0
+            out, r, stats = M.moe_fsmoe_ep(p, x, cfg.moe, mesh=mesh)
+            return out, stats
+        out, stats = jax.jit(f)(ps, xs)
+        assert int(stats.drops) == 0
+        assert int(stats.counts.sum()) > 0
         assert np.allclose(ref, out, atol=1e-4)
         g1 = jax.jit(jax.grad(lambda p, x: (f(p, x)[0]**2).sum()))(ps, xs)
         g2 = jax.grad(lambda p: (M.moe_naive(p, x, cfg.moe)[0]**2).sum())(p)
@@ -130,8 +131,8 @@ def test_moe_etp_shard_map_matches_naive(mesh8):
                           p, pspec)
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
         def f(p, x):
-            out, r = M.moe_etp_shard_map(p, x, cfg.moe, mesh=mesh,
-                                         batch_axes=("data",))
+            out, r, stats = M.moe_etp_shard_map(p, x, cfg.moe, mesh=mesh,
+                                                batch_axes=("data",))
             return out
         out = jax.jit(f)(ps, xs)
         assert np.allclose(ref, out, atol=1e-4)

@@ -143,6 +143,10 @@ def test_combine_linearity_property(seed):
 
 def test_sparse_moe_block_entrypoint(setup):
     cfg, p, x = setup
-    out, aux, z = M.sparse_moe_block(p, x.reshape(4, 16, 32), cfg)
+    out, aux, z, stats = M.sparse_moe_block(p, x.reshape(4, 16, 32), cfg)
     assert out.shape == (4, 16, 32)
     assert np.isfinite(float(aux)) and np.isfinite(float(z))
+    # telemetry: every (token, expert) routing is counted
+    K = cfg.moe.experts_per_token
+    assert stats.counts.shape == (cfg.moe.num_experts,)
+    assert int(stats.counts.sum()) + int(stats.drops) == 4 * 16 * K

@@ -46,13 +46,41 @@ def test_parse_basic():
        st.sampled_from(["none", "so", "epso"]),
        st.sampled_from(["gpipe", "1f1b"]),
        st.sampled_from(["shardmap", "masked"]),
-       st.integers(1, 8), st.booleans())
+       st.integers(1, 8), st.booleans(),
+       st.sampled_from([None, "capacity", "dropless"]))
 def test_parse_str_roundtrip(dp, pp, ep, tp, pod, opt, sched, impl, mb,
-                             fsdp):
+                             fsdp, moe):
     p = ParallelPlan(dp=dp, pp=pp, ep=ep, tp=tp, pod=pod, opt_shard=opt,
                      pp_schedule=sched, pp_impl=impl, microbatches=mb,
-                     fsdp=fsdp)
+                     fsdp=fsdp, moe_dispatch=moe)
     assert ParallelPlan.parse(str(p)) == p
+
+
+def test_parse_moe_dispatch_option():
+    p = ParallelPlan.parse("dp=2,ep=2,moe=dropless")
+    assert p.moe_dispatch == "dropless"
+    assert "moe=dropless" in str(p)
+    assert ParallelPlan.parse("dp=2").moe_dispatch is None   # defers to cfg
+    with pytest.raises(ValueError, match="moe_dispatch"):
+        ParallelPlan.parse("dp=2,moe=sometimes")
+    # the plan's ParallelConfig carries the pinned mode to make_train_step
+    rp = ResolvedPlan(plan=ParallelPlan.parse("dp=2,moe=dropless"))
+    assert rp.parallel_config().moe_dispatch == "dropless"
+    assert ResolvedPlan(
+        plan=ParallelPlan.parse("dp=2")).parallel_config().moe_dispatch is None
+
+
+def test_plan_apply_to_model():
+    plan = ParallelPlan.parse("dp=2,ep=2,moe=dropless")
+    cfg = moe_cfg(E=4)
+    assert cfg.moe.dispatch == "capacity"
+    cfg2 = plan.apply_to_model(cfg)
+    assert cfg2.moe.dispatch == "dropless"
+    assert cfg.moe.dispatch == "capacity"          # original untouched
+    # nothing pinned, or no MoE block: config passes through unchanged
+    assert ParallelPlan.parse("dp=2").apply_to_model(cfg) is cfg
+    dense = dense_cfg()
+    assert plan.apply_to_model(dense) is dense
 
 
 def test_parse_errors_are_descriptive():
@@ -203,10 +231,10 @@ def test_kernel_plan_backend_drives_moe_stage_backend():
     assert M.stage45_backend(cfg.moe) == cfg.moe.kernel_backend  # 'ref' plan
     p = M.init_moe_block(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64))
-    ref, _, _ = M.sparse_moe_block(p, x, cfg)
+    ref, _, _, _ = M.sparse_moe_block(p, x, cfg)
     with use_kernel_plan(KernelPlan(backend="pallas", tile_m=8)):
         assert M.stage45_backend(cfg.moe) == "pallas"
-        out, _, _ = M.sparse_moe_block(p, x, cfg)
+        out, _, _, _ = M.sparse_moe_block(p, x, cfg)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
 
 
@@ -341,7 +369,7 @@ def test_ep_tp_axis_pair_through_sparse_moe_block(mesh8):
         except ValueError as e:
             assert "not a mesh axis" in str(e)
         def f(p, x):
-            out, aux, z = M.sparse_moe_block(
+            out, aux, z, stats = M.sparse_moe_block(
                 p, x.reshape(4, 16, 32), cfg, mesh=mesh, ep_axis="ep",
                 tp_axis="tp", batch_axes=("data",))
             return out.reshape(64, 32)

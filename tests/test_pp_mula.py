@@ -23,7 +23,7 @@ def test_mula_pp_stages_match_sequential(sched):
 
     def stage_fwd(sp, x):
         def body(h, lp):
-            h, _, _ = _moe_block(lp, h, cfg, None, "", None)
+            h, _, _, _ = _moe_block(lp, h, cfg, None, "", None)
             return h, None
         x, _ = jax.lax.scan(body, x, sp)
         return x
