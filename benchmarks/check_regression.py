@@ -19,8 +19,16 @@ Checks (kind auto-detected from the JSON shape):
   masked one at the largest fresh vocab point (the reclaimed head compute
   — a regression here means non-last stages are paying the vocab matmul
   again, even if absolute times sit inside the tolerance band).
-* BENCH_epso — per-mode step times within tolerance; EPSO placed state
-  bytes must stay strictly below SO (the paper's memory mechanism).
+* BENCH_epso — per-mode step times within tolerance; placed state bytes
+  must order epso < so < none (the paper's memory mechanism); and, when
+  the fresh epso point ran with the overlapped update (``opt_overlap``
+  recorded as ring/xla), ``check_epso_time`` gates the step-time fix
+  itself: overlapped epso must be at parity-or-better with eager so
+  (``--epso-parity``) and within ``--epso-vs-none`` of the unsharded
+  baseline — the regression this repo's overlap work exists to keep
+  fixed. Skipped (with a notice) when the fresh run recorded overlap
+  off, so the CI overlap-off leg only exercises the eager path's
+  vs-baseline tolerance.
 * BENCH_moe — per-shape capacity/dropless step times within tolerance;
   structurally, every dropless point must report zero drops AND conserve
   all routed (token, expert) pairs, while the starved capacity points must
@@ -100,6 +108,63 @@ def check_epso(fresh: dict, base: dict, tol: float) -> list:
                 "EPSO placed state bytes not below SO: "
                 f"{modes['epso']['state_bytes_per_device']} >= "
                 f"{modes['so']['state_bytes_per_device']}")
+    if {"so", "none"} <= modes.keys():
+        if modes["so"]["state_bytes_per_device"] >= \
+                modes["none"]["state_bytes_per_device"]:
+            errors.append(
+                "SO placed state bytes not below unsharded: "
+                f"{modes['so']['state_bytes_per_device']} >= "
+                f"{modes['none']['state_bytes_per_device']}")
+    return errors
+
+
+def _epso_table(modes: dict) -> str:
+    """Readable per-mode delta table for check_epso_time failures."""
+    none_t = modes.get("none", {}).get("step_time_ms")
+    lines = [f"  {'mode':6s} {'overlap':8s} {'step_ms':>9s} {'vs none':>8s}"]
+    for mode in ("none", "so", "epso"):
+        m = modes.get(mode)
+        if m is None:
+            continue
+        rel = (f"{m['step_time_ms'] / none_t:7.2f}x"
+               if none_t else f"{'n/a':>8s}")
+        lines.append(f"  {mode:6s} {str(m.get('opt_overlap', '?')):8s} "
+                     f"{m['step_time_ms']:9.1f} {rel}")
+    return "\n".join(lines)
+
+
+def check_epso_time(fresh: dict, parity_tol: float,
+                    vs_none_tol: float) -> list:
+    """Gate the overlapped-EPSO step-time fix within one fresh run.
+
+    Only meaningful when the fresh epso point actually ran overlapped —
+    that is what moved its collectives off the critical path. In-run
+    comparisons (epso vs so vs none from the same process, same median-of-N
+    methodology) are far less runner-sensitive than vs-baseline times, so
+    the tolerances here can be much tighter than ``--tol``.
+    """
+    modes = fresh.get("modes", {})
+    if not {"none", "so", "epso"} <= modes.keys():
+        return []
+    ov = modes["epso"].get("opt_overlap")
+    if ov in (None, "off"):
+        print("check_epso_time: skipped (fresh epso ran with overlap "
+              f"{ov!r} — nothing to gate)")
+        return []
+    errors = []
+    et = modes["epso"]["step_time_ms"]
+    st = modes["so"]["step_time_ms"]
+    nt = modes["none"]["step_time_ms"]
+    if et > st * parity_tol:
+        errors.append(
+            f"overlapped epso ({ov}) step time {et:.1f}ms exceeds "
+            f"{parity_tol}x eager so {st:.1f}ms — the step-time "
+            f"regression is back:\n" + _epso_table(modes))
+    if et > nt * vs_none_tol:
+        errors.append(
+            f"overlapped epso ({ov}) step time {et:.1f}ms exceeds "
+            f"{vs_none_tol}x unsharded baseline {nt:.1f}ms:\n"
+            + _epso_table(modes))
     return errors
 
 
@@ -152,6 +217,11 @@ def main(argv=None):
                     help="max dropless/capacity step-time ratio per moe "
                          "dispatch point (loose: the ragged grouped-matmul "
                          "lowering costs ~E dense matmuls)")
+    ap.add_argument("--epso-parity", type=float, default=1.15,
+                    help="max overlapped-epso / eager-so step-time ratio "
+                         "(in-run, so tighter than --tol)")
+    ap.add_argument("--epso-vs-none", type=float, default=1.25,
+                    help="max overlapped-epso / unsharded step-time ratio")
     args = ap.parse_args(argv)
 
     fresh, base = _load(args.fresh), _load(args.baseline)
@@ -163,6 +233,7 @@ def main(argv=None):
         kind = "pp"
     elif "modes" in fresh:
         errors = check_epso(fresh, base, args.tol)
+        errors += check_epso_time(fresh, args.epso_parity, args.epso_vs_none)
         kind = "epso"
     else:
         print(f"unrecognized bench JSON shape in {args.fresh}")

@@ -195,6 +195,10 @@ class ParallelConfig:
     fsdp_params: bool = False
     # optimizer state sharding: 'none' | 'so' (DP only) | 'epso' (DP x MP)
     optimizer_sharding: str = "epso"
+    # overlapped optimizer collectives (optim/overlap.py): None/'auto' turns
+    # the bucketed ring update on for epso on a real mesh; 'ring'/'xla' force
+    # an impl; 'off' keeps the eager GSPMD-derived tail.
+    opt_overlap: Optional[str] = None   # None|'auto'|'off'|'ring'|'xla'
     # selective activation checkpointing modules (paper §1 SAC)
     remat_policy: str = "block"     # none|norm|attn|moe|block(=full block inputs)
     # gradient accumulation microbatches inside train_step
@@ -225,6 +229,9 @@ class ParallelConfig:
         if self.moe_dispatch not in (None, "capacity", "dropless"):
             raise ValueError(f"moe_dispatch must be None, 'capacity' or "
                              f"'dropless', got {self.moe_dispatch!r}")
+        if self.opt_overlap not in (None, "auto", "off", "ring", "xla"):
+            raise ValueError(f"opt_overlap must be None, 'auto', 'off', "
+                             f"'ring' or 'xla', got {self.opt_overlap!r}")
         if self.pp_stages < 1:
             raise ValueError(f"pp_stages must be >= 1, got {self.pp_stages}")
         if self.microbatches < 1:

@@ -103,7 +103,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         log_every: int = 10, d_model: int = 256, layers: int = 2,
         d_ff: int = 0, moe_dff: int = 0, mesh: str = None,
         parallel: str = None,
-        opt_shard: str = None, pp_schedule: str = None,
+        opt_shard: str = None, opt_overlap: str = None,
+        pp_schedule: str = None,
         pp_impl: str = None, moe_dispatch: str = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
@@ -141,6 +142,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         pplan = ParallelPlan.parse(parallel)
         if opt_shard is not None:               # CLI flag overrides the spec
             pplan = dataclasses.replace(pplan, opt_shard=opt_shard)
+        if opt_overlap is not None:
+            pplan = dataclasses.replace(pplan, opt_overlap=opt_overlap)
         if pp_schedule is not None:
             pplan = dataclasses.replace(pplan, pp_schedule=pp_schedule)
         if pp_impl is not None:
@@ -151,6 +154,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         pplan = ParallelPlan.from_legacy(mesh, cfg=cfg,
                                          opt_shard=opt_shard or "none",
                                          pp_schedule=pp_schedule or "1f1b")
+        if opt_overlap is not None:
+            pplan = dataclasses.replace(pplan, opt_overlap=opt_overlap)
         if pp_impl is not None:
             pplan = dataclasses.replace(pplan, pp_impl=pp_impl)
         if moe_dispatch is not None:
@@ -206,10 +211,19 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                         seed=seed)
     par = ParallelConfig(microbatches=microbatches, remat_policy=sac,
                          optimizer_sharding=opt_shard,
+                         opt_overlap=pplan.opt_overlap
+                         if pplan is not None else opt_overlap,
                          pp_stages=pp_stages, pp_schedule=pp_schedule,
                          pp_impl=pp_impl,
                          moe_dispatch=pplan.moe_dispatch
                          if pplan is not None else moe_dispatch)
+    # resolve the overlap up front so the header/summary record what the
+    # step will actually run (and bad combinations fail with the same error
+    # make_train_step would raise)
+    from repro.optim.overlap import resolve_opt_overlap
+    ov_impl = resolve_opt_overlap(
+        par.opt_overlap, opt_shard,
+        plan.mesh if plan is not None else None)
 
     state = init_state(jax.random.PRNGKey(seed), cfg, train, plan=plan,
                        opt_sharding_mode=opt_shard)
@@ -253,7 +267,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     print(f"arch={cfg.name} params={nparams/1e6:.1f}M "
           f"vocab={padded_vocab(cfg)} "
           f"plan={pplan if pplan is not None else 'single'} "
-          f"opt_shard={opt_shard} pp={pp_stages}"
+          f"opt_shard={opt_shard} opt_overlap={ov_impl} pp={pp_stages}"
           + (f":{pp_schedule}:{pp_impl}" if pp_stages > 1 else ""))
 
     injected = {"hard": False, "soft": False}
@@ -279,28 +293,39 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             lambda a: jax.device_put(a, bsh) if bsh is not None
             else jnp.asarray(a), batch_np)
         state, metrics = step_fn(state, batch_dev)
-        loss = float(metrics["loss"])
-        gnorm = float(metrics["grad_norm"])
+        # one host sync per step: batch every fetched metric into a single
+        # device_get, and only pull the MoE telemetry arrays on steps where
+        # they will actually be formatted — per-metric float()/np.asarray()
+        # calls would each block and serialize the overlapped step
+        will_log = step % log_every == 0 or step == steps - 1
+        fetch = {"loss": metrics["loss"], "lr": metrics["lr"],
+                 "grad_norm": metrics["grad_norm"]}
+        if "moe_drops" in metrics and will_log:
+            fetch["moe_drops"] = metrics["moe_drops"]
+            fetch["moe_load"] = metrics["moe_load"]
+        vals = jax.device_get(fetch)
+        loss = float(vals["loss"])
+        gnorm = float(vals["grad_norm"])
         per_rank = [loss]
         if step == inject_soft_at and not injected["soft"]:
             injected["soft"] = True
             print(f"  !! injected SOFT failure (NaN) on node 1 @ step {step}")
             per_rank = [loss, float("nan")]
         history[step] = {"step": step, "loss": loss,
-                         "lr": float(metrics["lr"]), "grad_norm": gnorm}
+                         "lr": float(vals["lr"]), "grad_norm": gnorm}
         moe_line = ""
-        if "moe_drops" in metrics:     # per-expert routing telemetry
-            drops = float(metrics["moe_drops"])
-            load = np.asarray(metrics["moe_load"])
+        if "moe_drops" in vals:        # per-expert routing telemetry
+            drops = float(vals["moe_drops"])
+            load = np.asarray(vals["moe_load"])
             history[step]["moe_drops"] = drops
             history[step]["moe_load_max"] = float(load.max()) if load.size \
                 else 0.0
             moe_line = (f" drops {drops:.0f} "
                         f"load_max {history[step]['moe_load_max']:.3f}")
-        if step % log_every == 0 or step == steps - 1:
+        if will_log:
             dt = time.time() - t0
             print(f"step {step:5d} loss {loss:.4f} gnorm {gnorm:.3f} "
-                  f"lr {float(metrics['lr']):.2e}{moe_line} ({dt:.1f}s)")
+                  f"lr {float(vals['lr']):.2e}{moe_line} ({dt:.1f}s)")
         return state, {"loss": loss, "per_rank_losses": per_rank,
                        "per_rank_grad_norms": [gnorm]}
 
@@ -322,7 +347,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         json.dump(list(result), f)
     summary = {"arch": cfg.name, "steps": end_step, "mesh": mesh,
                "parallel": str(pplan) if pplan is not None else None,
-               "opt_shard": opt_shard, "pp_stages": pp_stages,
+               "opt_shard": opt_shard, "opt_overlap": ov_impl,
+               "pp_stages": pp_stages,
                "moe_dispatch": cfg.moe.dispatch if cfg.moe is not None
                else None,
                "pp_schedule": pp_schedule if pp_stages > 1 else None,
@@ -374,6 +400,14 @@ def main():
                     help="optimizer-state sharding (paper §3.2); overrides "
                          "a --parallel spec's opt= option (unset = spec "
                          "decides, default none)")
+    ap.add_argument("--opt-overlap", default=None,
+                    choices=["auto", "off", "ring", "xla"],
+                    help="overlapped optimizer collectives (optim/overlap): "
+                         "'auto' (default) runs the bucketed ppermute-ring "
+                         "update for epso on a real mesh; 'ring'/'xla' force "
+                         "an impl for so/epso; 'off' keeps the eager "
+                         "GSPMD-derived update. Overrides a --parallel "
+                         "spec's overlap= option")
     ap.add_argument("--pp-schedule", default=None,
                     choices=["gpipe", "1f1b"],
                     help="pipeline microbatch schedule when the plan has a "
@@ -413,7 +447,8 @@ def main():
         d_model=args.d_model, layers=args.layers, seed=args.seed,
         ckpt_interval=args.ckpt_interval, mesh=args.mesh,
         parallel=args.parallel,
-        opt_shard=args.opt_shard, pp_schedule=args.pp_schedule,
+        opt_shard=args.opt_shard, opt_overlap=args.opt_overlap,
+        pp_schedule=args.pp_schedule,
         pp_impl=args.pp_impl, moe_dispatch=args.moe_dispatch,
         log_every=args.log_every, n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,

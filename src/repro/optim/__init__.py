@@ -1,4 +1,7 @@
-from .adamw import AdamWState, adamw_init, adamw_update
+from .adamw import (AdamWState, adamw_init, adamw_leaf, adamw_update,
+                    clip_scale, global_norm)
 from .schedule import warmup_cosine
 from .epso import (optimizer_state_specs, optimizer_state_shardings,
-                   state_bytes_per_device)
+                   state_bytes_per_device, plan_update_buckets,
+                   update_axis_order, UpdatePlan, UpdateBucket, UpdateLeaf)
+from .overlap import overlapped_adamw_update, resolve_opt_overlap

@@ -40,6 +40,32 @@ def global_norm(grads) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
+def clip_scale(gnorm, grad_clip, clip_enabled):
+    """The global-norm clip multiplier (shared by the eager and overlapped
+    update paths so their math cannot diverge)."""
+    scale = jnp.where(gnorm > grad_clip, grad_clip / (gnorm + 1e-12), 1.0)
+    if grad_clip <= 0:
+        return 1.0
+    if clip_enabled is not None:
+        scale = jnp.where(clip_enabled, scale, 1.0)
+    return scale
+
+
+def adamw_leaf(g, master, m, v, *, scale, lr, bc1, bc2, beta1, beta2, eps,
+               weight_decay):
+    """Elementwise AdamW on one leaf (or one shard of a leaf — the update is
+    pointwise, so SO/EPSO shards update independently). The single source of
+    the update math for both adamw_update and the overlapped bucket path."""
+    g = g.astype(jnp.float32) * scale
+    m2 = beta1 * m + (1 - beta1) * g
+    v2 = beta2 * v + (1 - beta2) * jnp.square(g)
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                + weight_decay * master)
+    return new_master, m2, v2
+
+
 def adamw_update(grads, state: AdamWState, *, lr, beta1=0.9, beta2=0.99,
                  eps=1e-8, weight_decay=0.1, grad_clip=1.0,
                  clip_enabled=None, param_dtype=jnp.float32):
@@ -48,25 +74,16 @@ def adamw_update(grads, state: AdamWState, *, lr, beta1=0.9, beta2=0.99,
     Returns (new_params(param_dtype), new_state, metrics)."""
     step = state.step + 1
     gnorm = global_norm(grads)
-    scale = jnp.where(gnorm > grad_clip, grad_clip / (gnorm + 1e-12), 1.0)
-    if grad_clip <= 0:
-        scale = 1.0
-    elif clip_enabled is not None:
-        scale = jnp.where(clip_enabled, scale, 1.0)
+    scale = clip_scale(gnorm, grad_clip, clip_enabled)
 
     t = step.astype(jnp.float32)
     bc1 = 1.0 - beta1 ** t
     bc2 = 1.0 - beta2 ** t
 
     def upd(g, master, m, v):
-        g = g.astype(jnp.float32) * scale
-        m2 = beta1 * m + (1 - beta1) * g
-        v2 = beta2 * v + (1 - beta2) * jnp.square(g)
-        mhat = m2 / bc1
-        vhat = v2 / bc2
-        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
-                                    + weight_decay * master)
-        return new_master, m2, v2
+        return adamw_leaf(g, master, m, v, scale=scale, lr=lr, bc1=bc1,
+                          bc2=bc2, beta1=beta1, beta2=beta2, eps=eps,
+                          weight_decay=weight_decay)
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_ma = jax.tree.leaves(state.master)

@@ -19,8 +19,16 @@ shard.
 Greedy dim assignment: each extra mesh axis (or axis group) is placed on the
 largest divisible, still-unsharded dim of the leaf. Leaves too small to
 divide stay replicated (negligible memory).
+
+``plan_update_buckets`` turns the spec-level placement into the bucket
+schedule the overlapped update (repro/optim/overlap.py) executes: leaves are
+grouped by their *extra* sharding (state spec minus param spec), packed into
+size-capped buckets in flatten order, so each bucket's updated-param
+all-gather is one fused collective independent of every other bucket's.
 """
 from __future__ import annotations
+
+from typing import NamedTuple, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -37,7 +45,14 @@ def _augment(spec: P, shape, axes_groups, mesh) -> P:
             if a is not None:
                 used.add(a)
     for group in axes_groups:
-        group = tuple(a for a in group if a not in used and a in mesh.shape)
+        # order-preserving dedupe: a repeated axis inside one group must not
+        # be placed twice (P(('data','data')) is XLA-invalid)
+        fill, seen = [], set()
+        for a in group:
+            if a not in used and a in mesh.shape and a not in seen:
+                fill.append(a)
+                seen.add(a)
+        group = tuple(fill)
         if not group:
             continue
         size = 1
@@ -122,3 +137,131 @@ def state_bytes_per_device(params, rules: ShardingRules, mode: str) -> int:
     per_dev = sum(jax.tree.leaves(
         jax.tree.map(shard_elems, specs, params)))
     return per_dev * 12    # 4B * (master + m + v)
+
+
+# ---------------------------------------------------------------------------
+# Bucket planner for the overlapped update (repro/optim/overlap.py)
+# ---------------------------------------------------------------------------
+
+# canonical linear-rank order over the update axes: mesh-major, matching the
+# major-to-minor order of a GSPMD tuple spec — so the fused gather's leading
+# index enumerates shards exactly as the per-leaf tuple-spec placement does.
+_UPDATE_AXIS_ORDER = ("pod", "data", "model", "ep", "tp")
+
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+def update_axis_order(mesh) -> Tuple[str, ...]:
+    """The mesh's update axes (axes SO/EPSO may add to a state spec), in the
+    canonical rank order the overlapped gather linearizes over."""
+    return tuple(a for a in _UPDATE_AXIS_ORDER if a in mesh.shape)
+
+
+class UpdateLeaf(NamedTuple):
+    """One param-tree leaf inside an update bucket.
+
+    ``added`` records the extra sharding the optimizer-state spec carries on
+    top of the param spec: ``((dim, (axis, ...)), ...)`` — the axes (in spec
+    major-to-minor order) that further split param-local dim ``dim``. The
+    union of added axes equals the owning bucket's ``axes``. ``psum_axes``
+    is every mesh axis the *state* spec uses (param + added): the axes a
+    scalar reduction over this leaf's shards must psum over to be global.
+    """
+    index: int                 # position in jax.tree flatten order
+    path: str                  # human-readable key path (diagnostics)
+    added: Tuple[Tuple[int, Tuple[str, ...]], ...]
+    psum_axes: Tuple[str, ...]
+
+
+class UpdateBucket(NamedTuple):
+    axes: Tuple[str, ...]      # gather axes, canonical order; () = local-only
+    leaves: Tuple[UpdateLeaf, ...]
+    elems: int                 # global elements across the bucket's leaves
+
+
+class UpdatePlan(NamedTuple):
+    buckets: Tuple[UpdateBucket, ...]
+    axes: Tuple[str, ...]      # union of all buckets' axes
+    n_leaves: int
+    mode: str
+
+
+def _entry_axes(e):
+    return tuple(a for a in (e if isinstance(e, tuple) else (e,))
+                 if a is not None)
+
+
+def plan_update_buckets(params, rules: ShardingRules, mode: str, *,
+                        max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                        ) -> UpdatePlan:
+    """Group the param tree into size-capped update buckets.
+
+    Leaves are keyed by their extra-axes signature (the mesh axes the state
+    spec adds over the param spec — the axes whose all-gather reassembles the
+    updated params) and packed greedily in flatten order, ``max_bucket_bytes``
+    of fp32 master weights per bucket; a single leaf larger than the cap gets
+    its own bucket. Leaves whose state spec equals their param spec form
+    ``axes=()`` buckets (pure local update, no collective).
+
+    Note on "layer order": the model stacks layers into single leaves
+    (params['layers'][...] have a leading L dim), so flatten order — the
+    order gradients materialize from one backward pass over the stack — is
+    the bucket order; buckets are mutually dataflow-independent either way,
+    which is what lets the scheduler overlap their collectives.
+    """
+    mesh = rules.mesh
+    order = update_axis_order(mesh)
+    pspecs = jax.tree.leaves(param_specs(params, rules))
+    ospecs = jax.tree.leaves(optimizer_state_specs(params, rules, mode))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    assert len(flat) == len(pspecs) == len(ospecs)
+
+    mesh_order = tuple(mesh.shape)
+    leaves = []
+    for i, ((path, leaf), ps, os_) in enumerate(zip(flat, pspecs, ospecs)):
+        shape = leaf.shape
+        added = []
+        for d in range(len(shape)):
+            pe = _entry_axes(ps[d]) if d < len(ps) else ()
+            oe = _entry_axes(os_[d]) if d < len(os_) else ()
+            if oe[:len(pe)] != pe:
+                raise ValueError(
+                    f"state spec {os_} does not extend param spec {ps} at "
+                    f"dim {d} of {jax.tree_util.keystr(path)}")
+            extra = oe[len(pe):]
+            if extra:
+                denom = 1
+                for a in oe:
+                    denom *= mesh.shape[a]
+                if shape[d] % denom != 0:
+                    raise ValueError(
+                        f"dim {d} of {jax.tree_util.keystr(path)} ({shape}) "
+                        f"not divisible by state spec {os_}")
+                added.append((d, extra))
+        state_axes = {a for e in os_ for a in _entry_axes(e)}
+        psum_axes = tuple(a for a in mesh_order if a in state_axes)
+        leaves.append(UpdateLeaf(i, jax.tree_util.keystr(path),
+                                 tuple(added), psum_axes))
+
+    max_elems = max(max_bucket_bytes // 4, 1)
+    buckets = []
+    open_buckets = {}      # signature -> (leaves, elems)
+    for lf, (path, leaf) in zip(leaves, flat):
+        sig = tuple(a for a in order
+                    if any(a in axes for _, axes in lf.added))
+        cur = open_buckets.get(sig)
+        size = int(leaf.size) if hasattr(leaf, "size") else 1
+        if cur is not None and cur[1] + size > max_elems and cur[0]:
+            buckets.append(UpdateBucket(sig, tuple(cur[0]), cur[1]))
+            cur = None
+        if cur is None:
+            cur = ([], 0)
+        cur[0].append(lf)
+        open_buckets[sig] = (cur[0], cur[1] + size)
+    for sig, (ls, elems) in open_buckets.items():
+        if ls:
+            buckets.append(UpdateBucket(sig, tuple(ls), elems))
+    # deterministic schedule: buckets in flatten order of their first leaf
+    buckets.sort(key=lambda b: b.leaves[0].index)
+    union = tuple(a for a in order if any(a in b.axes for b in buckets))
+    return UpdatePlan(tuple(buckets), union, len(leaves), mode)

@@ -145,6 +145,7 @@ AXES: Tuple[Tuple[str, str], ...] = (
     ("pod", "pod"), ("dp", "data"), ("pp", "pp"), ("ep", "ep"), ("tp", "tp"))
 _AXIS_KEYS = tuple(k for k, _ in AXES)
 _OPT_MODES = ("none", "so", "epso")
+_OPT_OVERLAPS = ("auto", "off", "ring", "xla")
 _PP_SCHEDULES = ("gpipe", "1f1b")
 _PP_IMPLS = ("shardmap", "masked")
 _MOE_DISPATCH = ("capacity", "dropless")
@@ -159,6 +160,10 @@ class ParallelPlan:
     tp: int = 1
     pod: int = 1
     opt_shard: str = "none"          # none | so | epso  (paper §3.2)
+    # overlapped optimizer collectives (optim/overlap.py): None/'auto' = on
+    # (ring) for epso on a real mesh, off otherwise; 'ring'/'xla' force an
+    # impl; 'off' keeps the eager GSPMD-derived update tail.
+    opt_overlap: Optional[str] = None    # None | auto | off | ring | xla
     pp_schedule: str = "1f1b"        # gpipe | 1f1b      (paper §2.2)
     pp_impl: str = "shardmap"        # shardmap (per-stage programs) | masked
     microbatches: int = 1
@@ -177,6 +182,9 @@ class ParallelPlan:
         if self.opt_shard not in _OPT_MODES:
             raise ValueError(f"opt_shard must be one of {_OPT_MODES}, "
                              f"got {self.opt_shard!r}")
+        if self.opt_overlap not in (None,) + _OPT_OVERLAPS:
+            raise ValueError(f"opt_overlap must be None or one of "
+                             f"{_OPT_OVERLAPS}, got {self.opt_overlap!r}")
         if self.pp_schedule not in _PP_SCHEDULES:
             raise ValueError(f"pp_schedule must be one of {_PP_SCHEDULES}, "
                              f"got {self.pp_schedule!r}")
@@ -229,6 +237,8 @@ class ParallelPlan:
                 put("microbatches" if k in ("mb", "microbatches") else k, n)
             elif k in ("opt", "opt_shard"):
                 put("opt_shard", v)
+            elif k in ("overlap", "opt_overlap"):
+                put("opt_overlap", v)
             elif k in ("schedule", "pp_schedule", "sched"):
                 put("pp_schedule", v)
             elif k in ("impl", "pp_impl"):
@@ -241,7 +251,8 @@ class ParallelPlan:
                 raise ValueError(
                     f"unknown role {k!r} in parallel spec {spec!r}; valid "
                     f"axes: {', '.join(_AXIS_KEYS)}; options: opt={{none|so|"
-                    f"epso}}, schedule={{gpipe|1f1b}}, "
+                    f"epso}}, overlap={{auto|off|ring|xla}}, "
+                    f"schedule={{gpipe|1f1b}}, "
                     f"impl={{shardmap|masked}}, moe={{capacity|dropless}}, "
                     f"mb=<int>, fsdp")
         kw.update(overrides)
@@ -257,6 +268,8 @@ class ParallelPlan:
             parts = ["dp=1"]
         if self.opt_shard != "none":
             parts.append(f"opt={self.opt_shard}")
+        if self.opt_overlap is not None:
+            parts.append(f"overlap={self.opt_overlap}")
         if self.pp_schedule != "1f1b":
             parts.append(f"schedule={self.pp_schedule}")
         if self.pp_impl != "shardmap":
@@ -419,6 +432,10 @@ class ResolvedPlan:
         return self.plan.opt_shard
 
     @property
+    def opt_overlap(self) -> Optional[str]:
+        return self.plan.opt_overlap
+
+    @property
     def pp_stages(self) -> int:
         return self.plan.pp
 
@@ -444,6 +461,7 @@ class ResolvedPlan:
         return ParallelConfig(microbatches=self.microbatches,
                               remat_policy=remat_policy,
                               optimizer_sharding=self.opt_shard,
+                              opt_overlap=self.plan.opt_overlap,
                               pp_stages=self.pp_stages,
                               pp_schedule=self.pp_schedule,
                               pp_impl=self.pp_impl,

@@ -27,7 +27,8 @@ from repro.models import (init_params, loss_fn, forward,
                           decode_step, prefill_with_cache, embed_tokens,
                           pipeline_stage_forward, lm_head_ce, PP_ARCH_TYPES)
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
-from repro.optim.epso import optimizer_state_shardings
+from repro.optim.epso import optimizer_state_shardings, plan_update_buckets
+from repro.optim.overlap import overlapped_adamw_update, resolve_opt_overlap
 from repro.parallel.pipeline import (check_pp_microbatches,
                                      pipelined_loss_and_grads,
                                      pipelined_loss_and_grads_per_stage,
@@ -161,6 +162,20 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
             and "pp" in getattr(mesh, "shape", {})):
         # surface the wave-balance guardrail at build time, not first call
         check_pp_microbatches(max(nmb, 1), pp)
+
+    # overlapped SO/EPSO update (optim/overlap.py): resolved and bucket-
+    # planned once at build time. 'auto' (the default) turns the bucketed
+    # ring schedule on for epso on a real mesh — the mode whose eager
+    # GSPMD-derived collectives regressed — and keeps 'so'/'none' eager.
+    ov_impl = "off"
+    if rules is not None and rules.mesh is not None:
+        ov_impl = resolve_opt_overlap(getattr(parallel, "opt_overlap", None),
+                                      opt_sharding_mode or "none", mesh)
+    update_plan = None
+    if ov_impl != "off":
+        _shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        update_plan = plan_update_buckets(_shapes, rules, opt_sharding_mode)
 
     def loss_for(params, mb):
         return loss_fn(params, mb, cfg, rules=rules, mesh=mesh,
@@ -319,10 +334,19 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
         clip_on = None
         if train.clip_after_warmup_only:
             clip_on = state.opt.step >= train.warmup_steps
-        new_params, new_opt, om = adamw_update(
-            grads, state.opt, lr=lr, beta1=train.beta1, beta2=train.beta2,
-            eps=train.eps, weight_decay=train.weight_decay,
-            grad_clip=train.grad_clip, clip_enabled=clip_on, param_dtype=pd)
+        if ov_impl != "off":
+            new_params, new_opt, om = overlapped_adamw_update(
+                grads, state.opt, rules=rules, mode=opt_sharding_mode,
+                impl=ov_impl, update_plan=update_plan, lr=lr,
+                beta1=train.beta1, beta2=train.beta2, eps=train.eps,
+                weight_decay=train.weight_decay, grad_clip=train.grad_clip,
+                clip_enabled=clip_on, param_dtype=pd)
+        else:
+            new_params, new_opt, om = adamw_update(
+                grads, state.opt, lr=lr, beta1=train.beta1,
+                beta2=train.beta2, eps=train.eps,
+                weight_decay=train.weight_decay, grad_clip=train.grad_clip,
+                clip_enabled=clip_on, param_dtype=pd)
         out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
         return TrainState(new_params, new_opt), out_metrics
 

@@ -243,3 +243,36 @@ def test_augment_properties(mesh_i, shape, spec_choice):
         for i in range(len(shape)))
     if not divisible:
         assert aug == base, (base, aug, shape)
+
+
+def test_augment_dedupes_repeated_axis_in_group():
+    """Regression: a group naming the same axis twice must not emit an XLA-
+    invalid spec like P(('data','data')) via the group-splitting fallback."""
+    mesh = _prop_mesh(2)                       # (4,2) data,model
+    aug = _augment(P(), (16,), [("data", "data")], mesh)
+    used = [a for e in aug for a in _entry_axes(e)]
+    assert len(used) == len(set(used)), aug
+    assert aug == P("data")
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, len(_PROP_MESHES) - 1),
+       st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 17, 24, 32, 64]),
+                min_size=1, max_size=3),
+       st.lists(st.sampled_from(["pod", "data", "model", "data", "model"]),
+                min_size=1, max_size=5))
+def test_augment_adversarial_groups(mesh_i, shape, group):
+    """Same validity properties under hostile groups: repeated axes, axes
+    absent from the mesh, arbitrary order."""
+    mesh = _prop_mesh(mesh_i)
+    shape = tuple(shape)
+    aug = _augment(P(), shape, [tuple(group)], mesh)
+    assert len(aug) <= len(shape)
+    used = [a for e in aug for a in _entry_axes(e)]
+    assert len(used) == len(set(used)), (aug, group)
+    for i, e in enumerate(aug):
+        n = 1
+        for a in _entry_axes(e):
+            assert a in mesh.shape, (aug, group)
+            n *= mesh.shape[a]
+        assert shape[i] % n == 0, (aug, shape, mesh.shape)
