@@ -84,7 +84,7 @@ def measure(mesh_spec: str = "4,2", steps: int = 10, d_model: int = 64,
     import dataclasses
     import time
 
-    from repro.configs import ParallelConfig, TrainConfig, reduced
+    from repro.configs import TrainConfig, reduced
     from repro.optim.overlap import resolve_opt_overlap
     from repro.parallel.plan import ParallelPlan
     from repro.train import init_state, make_train_step
@@ -102,13 +102,22 @@ def measure(mesh_spec: str = "4,2", steps: int = 10, d_model: int = 64,
     rules = None
     for mode in modes:
         pplan = ParallelPlan.from_legacy(mesh_spec, cfg=cfg, opt_shard=mode)
-        if overlap != "auto":
-            pplan = dataclasses.replace(pplan, opt_overlap=overlap)
+        ov_setting = overlap
+        if overlap in ("ring", "xla") and mode == "none":
+            # unsharded has no optimizer collectives to overlap; forcing an
+            # impl would be rejected by resolve_opt_overlap
+            ov_setting = "off"
+        if ov_setting != "auto":
+            pplan = dataclasses.replace(pplan, opt_overlap=ov_setting)
         plan = pplan.resolve(cfg, global_batch=batch)
         rules = plan.rules
-        ov = resolve_opt_overlap(plan.opt_overlap, mode, plan.mesh)
         state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
-        step_fn = make_train_step(cfg, ParallelConfig(), tc, plan=plan)
+        # parallel=None: the plan supplies the ParallelConfig, including the
+        # overlap= token, so the built step runs exactly what we record
+        step_fn = make_train_step(cfg, None, tc, plan=plan)
+        ov = step_fn.opt_overlap_impl
+        assert ov == resolve_opt_overlap(plan.opt_overlap, mode, plan.mesh), \
+            (mode, ov, plan.opt_overlap)
         # explicit warmup: compile + place, block on the whole output so no
         # async dispatch leaks into the first timed step
         state, m = step_fn(state, b)

@@ -123,7 +123,9 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
     mismatch. A caller that already holds the ``train_state_shardings`` tree
     can pass it as ``state_shardings`` to skip the abstract init re-trace.
     With ``opt_sharding_mode=None`` (default) and no plan the raw function is
-    returned and the caller jits it (legacy single-device path).
+    returned and the caller jits it (legacy single-device path). Whatever is
+    returned carries the resolved optimizer-overlap impl
+    ('off'|'ring'|'xla') as ``.opt_overlap_impl``.
 
     With ``parallel.pp_stages > 1`` the loss/grad computation runs through
     the jitted 1f1b/gpipe pipeline executor instead of the microbatch
@@ -167,10 +169,16 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
     # planned once at build time. 'auto' (the default) turns the bucketed
     # ring schedule on for epso on a real mesh — the mode whose eager
     # GSPMD-derived collectives regressed — and keeps 'so'/'none' eager.
-    ov_impl = "off"
-    if rules is not None and rules.mesh is not None:
-        ov_impl = resolve_opt_overlap(getattr(parallel, "opt_overlap", None),
-                                      opt_sharding_mode or "none", mesh)
+    # The request follows the _unpack_plan precedence: an explicit
+    # ParallelConfig.opt_overlap wins, a None defers to the plan's
+    # ``overlap=`` token. Off-mesh, 'auto' degrades to 'off' but an explicit
+    # ring/xla request still errors (same behavior as launch/train.py).
+    ov_req = getattr(parallel, "opt_overlap", None)
+    if ov_req is None and plan is not None:
+        ov_req = plan.opt_overlap
+    on_mesh = rules is not None and rules.mesh is not None
+    ov_impl = resolve_opt_overlap(ov_req, opt_sharding_mode or "none",
+                                  mesh if on_mesh else None)
     update_plan = None
     if ov_impl != "off":
         _shapes = jax.eval_shape(
@@ -357,16 +365,21 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
             return _train_step(state, batch)
 
     if opt_sharding_mode is None:
-        return train_step
-    if rules is None or rules.mesh is None:
-        return jax.jit(train_step)
-    ssh = state_shardings
-    if ssh is None:
-        shapes = jax.eval_shape(
-            lambda: init_params(jax.random.PRNGKey(0), cfg))
-        ssh = train_state_shardings(shapes, rules, opt_sharding_mode)
-    # metrics subtree: None = unconstrained (scalars; XLA replicates them)
-    return jax.jit(train_step, out_shardings=(ssh, None))
+        fn = train_step
+    elif rules is None or rules.mesh is None:
+        fn = jax.jit(train_step)
+    else:
+        ssh = state_shardings
+        if ssh is None:
+            shapes = jax.eval_shape(
+                lambda: init_params(jax.random.PRNGKey(0), cfg))
+            ssh = train_state_shardings(shapes, rules, opt_sharding_mode)
+        # metrics subtree: None = unconstrained (scalars; XLA replicates)
+        fn = jax.jit(train_step, out_shardings=(ssh, None))
+    # the resolved overlap impl, for callers that record/assert what the
+    # built step actually runs (bench_epso.py, test_opt_overlap.py)
+    fn.opt_overlap_impl = ov_impl
+    return fn
 
 
 def make_prefill_step(cfg: ModelConfig, *, plan: Optional[ResolvedPlan] = None,

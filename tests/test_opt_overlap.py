@@ -224,7 +224,7 @@ def test_overlap_composes_with_shardmap_pp_mesh8(mesh8):
     ParallelPlan path (``overlap=`` plan token included)."""
     out = mesh8("""
         import jax, numpy as np
-        from repro.configs import ParallelConfig, TrainConfig, get_config, reduced
+        from repro.configs import TrainConfig, get_config, reduced
         from repro.parallel.plan import ParallelPlan
         from repro.train import init_state, make_train_step
 
@@ -238,17 +238,23 @@ def test_overlap_composes_with_shardmap_pp_mesh8(mesh8):
         batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
         outs = {}
+        impls = {}
         for overlap in ("off", "ring"):
             plan = ParallelPlan.parse(
                 f"dp=2,pp=2,ep=2,opt=epso,impl=shardmap,mb=4,"
                 f"overlap={overlap}").resolve(cfg, global_batch=8)
             state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
-            fn = make_train_step(cfg, ParallelConfig(), tc, plan=plan)
+            # parallel=None: the plan's overlap= token drives the step
+            fn = make_train_step(cfg, None, tc, plan=plan)
+            impls[overlap] = fn.opt_overlap_impl
             losses = []
             for _ in range(3):
                 state, m = fn(state, batch)
                 losses.append(float(m["loss"]))
             outs[overlap] = (state, losses)
+        # both legs must have built what they asked for, or the parity
+        # comparison below compares a path against itself
+        assert impls == {"off": "off", "ring": "ring"}, impls
         (s0, l0), (s1, l1) = outs["off"], outs["ring"]
         assert l0 == l1, (l0, l1)
         worst = 0.0
