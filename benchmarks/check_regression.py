@@ -29,6 +29,10 @@ Checks (kind auto-detected from the JSON shape):
   fixed. Skipped (with a notice) when the fresh run recorded overlap
   off, so the CI overlap-off leg only exercises the eager path's
   vs-baseline tolerance.
+* BENCH_kernels — the autotuner's measured claim: autotuned tiles at
+  parity-or-better with the plan default on every shape bucket
+  (``--kernel-parity``, in-run so tight), chosen tiles inside the target
+  VMEM budget, best times within ``--tol`` of the committed baseline.
 * BENCH_moe — per-shape capacity/dropless step times within tolerance;
   structurally, every dropless point must report zero drops AND conserve
   all routed (token, expert) pairs, while the starved capacity points must
@@ -168,6 +172,42 @@ def check_epso_time(fresh: dict, parity_tol: float,
     return errors
 
 
+def check_kernels(fresh: dict, base: dict, tol: float,
+                  parity: float) -> list:
+    """Gate the kernel autotuner's measured claim: the autotuned tiles are
+    no slower than the plan default on every bucket (in-run comparison, so
+    ``--kernel-parity`` is tight), the chosen tiles respect the target
+    hardware's VMEM budget, and best times stay within ``--tol`` of the
+    committed baseline on matching (kernel, bucket) points."""
+    errors = []
+    base_pts = {(p["kernel"], p["bucket"]): p
+                for p in base.get("kernel_points", [])}
+    for p in fresh.get("kernel_points", []):
+        key = (p["kernel"], p["bucket"])
+        # structural: autotuned must not lose to the default it was
+        # measured against in the same run
+        if p["best_ms"] > p["default_ms"] * parity:
+            errors.append(
+                f"kernel {key}: autotuned {p['best_ms']:.1f}ms "
+                f"({'x'.join(map(str, p['best_tiles']))}) exceeds {parity}x "
+                f"default {p['default_ms']:.1f}ms "
+                f"({'x'.join(map(str, p['default_tiles']))}) — the tuning "
+                f"table would slow this bucket down")
+        if not p.get("vmem_ok", True):
+            errors.append(
+                f"kernel {key}: chosen tiles "
+                f"{'x'.join(map(str, p['best_tiles']))} exceed the target "
+                f"VMEM budget — the pruner let a spilling config win")
+        b = base_pts.get(key)
+        if b is None:
+            continue
+        if p["best_ms"] > b["best_ms"] * tol:
+            errors.append(
+                f"kernel {key}: fresh best {p['best_ms']:.1f}ms > {tol}x "
+                f"baseline best {b['best_ms']:.1f}ms")
+    return errors
+
+
 def check_moe(fresh: dict, base: dict, tol: float, moe_ratio: float) -> list:
     errors = []
     base_pts = {p["shape"]: p for p in base.get("dispatch_points", [])}
@@ -222,10 +262,16 @@ def main(argv=None):
                          "(in-run, so tighter than --tol)")
     ap.add_argument("--epso-vs-none", type=float, default=1.25,
                     help="max overlapped-epso / unsharded step-time ratio")
+    ap.add_argument("--kernel-parity", type=float, default=1.05,
+                    help="max autotuned/default kernel-time ratio per "
+                         "bucket (in-run, so tighter than --tol)")
     args = ap.parse_args(argv)
 
     fresh, base = _load(args.fresh), _load(args.baseline)
-    if "dispatch_points" in fresh:
+    if "kernel_points" in fresh:
+        errors = check_kernels(fresh, base, args.tol, args.kernel_parity)
+        kind = "kernels"
+    elif "dispatch_points" in fresh:
         errors = check_moe(fresh, base, args.tol, args.moe_ratio)
         kind = "moe"
     elif "executor_points" in fresh or "points" in fresh:

@@ -10,7 +10,10 @@
 Tile sizes (MXU-aligned 128/512 defaults) and the interpret flag (True on
 CPU: kernels execute their Python bodies — how this container validates TPU
 kernels) come from the *active* ``parallel.plan.KernelPlan`` — plan-scoped
-via ``use_kernel_plan`` (leak-free), read at trace time. ``KERNEL_CONFIG``
+via ``use_kernel_plan`` (leak-free), read at trace time. Under
+``KernelPlan(tiles='auto')`` each wrapper first consults the measured
+tuning table (kernels/autotune.py) for its shape bucket and falls back to
+the plan's explicit tiles on a miss. ``KERNEL_CONFIG``
 remains as a thin deprecated dict-view of the process-default plan.
 Wrappers pad K/N dims up to tile multiples (zero-padding is exact for
 matmul) and slice back.
@@ -123,11 +126,27 @@ def gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
     return _gmm_fwd_impl(x, w, group_sizes)
 
 
+def _resolved_gmm_tiles(kp, G, M, K, N):
+    """Plan tiles, overridden by the tuning table under ``tiles='auto'``.
+    An auto tile_m only applies when it divides the plan's tile_m (the
+    dispatch pads group sizes to ``plan.tile_m``, so any divisor keeps the
+    ``group_sizes % tile_m == 0`` kernel contract) and divides M."""
+    tm, tk, tn = kp.tile_m, kp.tile_k, kp.tile_n
+    auto = kp.resolve_tiles("gmm", {"g": G, "m": M, "k": K, "n": N})
+    if auto is not None:
+        atm, atk, atn = auto
+        if atm and kp.tile_m % atm == 0 and M % atm == 0:
+            tm = atm
+        tk = atk or tk
+        tn = atn or tn
+    return tm, tk, tn
+
+
 def _gmm_fwd_impl(x, w, group_sizes):
     kp = current_kernel_plan()
-    tm, tk, tn = kp.tile_m, kp.tile_k, kp.tile_n
     M, K = x.shape
     G, _, N = w.shape
+    tm, tk, tn = _resolved_gmm_tiles(kp, G, M, K, N)
     tk = min(tk, K)
     tn = min(tn, N)
     xp = _pad_to(x, tk, 1)
@@ -149,18 +168,22 @@ def _gmm_fwd(x, w, group_sizes):
 def _gmm_bwd(res, dy):
     x, w, group_sizes = res
     kp = current_kernel_plan()
-    tm, tk, tn = kp.tile_m, kp.tile_k, kp.tile_n
     M, K = x.shape
     G, _, N = w.shape
-    # dx = gmm(dy, w^T)
+    # dx = gmm(dy, w^T) — resolves its own (k=N, n=K) bucket under 'auto'
     dx = _gmm_fwd_impl(dy, jnp.swapaxes(w, 1, 2), group_sizes)
-    # dw[g] = x_g^T dy_g  (tgmm kernel)
-    tk2 = min(tk, N)
-    tn2 = min(tn, K)
-    dyp = _pad_to(dy, tk2, 1)       # K-dim of tgmm lhs is N of dy? see below
-    # tgmm: lhs = x (M,K), rhs = dy (M,N) -> out (G,K,N)
+    # dw[g] = x_g^T dy_g  (tgmm kernel: lhs = x (M,K), rhs = dy (M,N)
+    # -> out (G,K,N)); tile defaults 512/512, table-overridable
+    tm = kp.tile_m
     tkk = min(512, K)
     tnn = min(512, N)
+    auto = kp.resolve_tiles("tgmm", {"g": G, "m": M, "k": K, "n": N})
+    if auto is not None:
+        atm, atk, atn = auto
+        if atm and kp.tile_m % atm == 0 and M % atm == 0:
+            tm = atm
+        tkk = min(atk or tkk, K)
+        tnn = min(atn or tnn, N)
     total = jnp.sum(group_sizes)
     row_mask = (jnp.arange(M) < total)[:, None]
     xp = _pad_to(x * row_mask.astype(x.dtype), tkk, 1)
@@ -201,10 +224,27 @@ def _tile_d(D):
     return 1
 
 
+def _combine_tiles(T, K, D):
+    """Divisor-scan defaults, overridden by the tuning table under
+    ``tiles='auto'`` when the table tiles divide the actual dims (these
+    wrappers don't pad, so non-divisors fall back)."""
+    tt, td = _tile_t(T), _tile_d(D)
+    auto = current_kernel_plan().resolve_tiles(
+        "combine", {"t": T, "k": K, "d": D})
+    if auto is not None:
+        at, ad = auto
+        if at and T % at == 0:
+            tt = at
+        if ad and D % ad == 0:
+            td = ad
+    return tt, td
+
+
 def _combine_fwd_impl(rows, weights):
     T, K, D = rows.shape
-    return combine_fwd_pallas(rows, weights, tile_t=_tile_t(T),
-                              tile_d=_tile_d(D), interpret=_interpret())
+    tt, td = _combine_tiles(T, K, D)
+    return combine_fwd_pallas(rows, weights, tile_t=tt, tile_d=td,
+                              interpret=_interpret())
 
 
 def _combine_fwd(rows, weights):
@@ -214,8 +254,9 @@ def _combine_fwd(rows, weights):
 def _combine_bwd(res, dout):
     rows, weights = res
     T, K, D = rows.shape
-    drows, dw = combine_bwd_pallas(rows, weights, dout, tile_t=_tile_t(T),
-                                   tile_d=_tile_d(D), interpret=_interpret())
+    tt, td = _combine_tiles(T, K, D)
+    drows, dw = combine_bwd_pallas(rows, weights, dout, tile_t=tt,
+                                   tile_d=td, interpret=_interpret())
     return drows, dw.astype(weights.dtype)
 
 
@@ -233,7 +274,16 @@ def fused_swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
 
 def _swiglu_impl(gate, up):
     M, N = gate.shape
-    return swiglu_pallas(gate, up, tile_m=_tile_t(M), tile_n=_tile_d(N),
+    tm, tn = _tile_t(M), _tile_d(N)
+    auto = current_kernel_plan().resolve_tiles(
+        "fused_swiglu", {"m": M, "n": N})
+    if auto is not None:
+        am, an = auto
+        if am and M % am == 0:
+            tm = am
+        if an and N % an == 0:
+            tn = an
+    return swiglu_pallas(gate, up, tile_m=tm, tile_n=tn,
                          interpret=_interpret())
 
 

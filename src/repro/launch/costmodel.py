@@ -61,6 +61,10 @@ def _merge(acc, probe, mult=1.0):
     acc["flops"] += f * mult
     acc["bytes"] += b * mult
     for k, v in c.items():
+        if k == "unknown_dtypes":      # list of dtype tokens, not a count
+            cur = acc["coll"].get(k, [])
+            acc["coll"][k] = sorted(set(cur) | set(v))
+            continue
         acc["coll"][k] = acc["coll"].get(k, 0.0) + v * mult
     return acc
 
@@ -532,7 +536,7 @@ def _analyze_optimizer(cfg, acc, rules, opt_mode):
     acc["coll"]["dp-grad-reduce"] = acc["coll"].get("dp-grad-reduce", 0.0) + \
         _dp_grad_reduce_bytes(params_bf16, rules)
     acc["coll"]["total"] = sum(v for k, v in acc["coll"].items()
-                               if k != "total")
+                               if k not in ("total", "unknown_dtypes"))
 
 
 # ----------------------------------------------------------------------------
@@ -612,3 +616,99 @@ def per_stage_costs(cfg: ModelConfig, *, pp: int, microbatches: int,
         })
     return {"ticks": int(T), "pp": pp, "impl": pp_impl if pp > 1 else "-",
             "microbatches": n_mb, "stages": stages}
+
+
+# ----------------------------------------------------------------------------
+# analytic per-kernel attribution (no compile — dryrun --parallel)
+# ----------------------------------------------------------------------------
+
+def per_kernel_costs(cfg: ModelConfig, pplan, *, global_batch: int,
+                     seq: int = 2048, hw: str | None = None,
+                     table=None) -> dict:
+    """Per-kernel roofline attribution of one MoE layer's forward pass,
+    per device, under ``pplan``'s axis sizes. Shape-only analytics.
+
+    Each row: analytic FLOPs/bytes (bf16 streams), arithmetic intensity,
+    the ``hw`` roofline's predicted time and bound; plus — when the tuning
+    ``table`` has a matching (kernel, backend, bucket) entry — the
+    measured tiles/time and achieved-vs-peak fraction stamped at bench
+    time. Predicted-vs-measured divergence per kernel is the number CI
+    tracks (check_regression.py::check_kernels).
+    """
+    from repro.launch import roofline as RL
+
+    spec = RL.get_hardware(hw or pplan.kernel.hw)
+    moe = cfg.moe
+    if moe is None:
+        return {"hw": spec.name, "rows": [], "note": f"{cfg.name} has no "
+                f"MoE block — per-kernel attribution covers expert kernels"}
+    d = cfg.d_model
+    f = moe.d_ff_expert
+    E = moe.num_experts
+    topk = moe.experts_per_token
+    dp_ways = pplan.pod * pplan.dp * pplan.ep       # token rows shard here
+    ep, tp = pplan.ep, pplan.tp
+    t_loc = max(global_batch * seq // dp_ways, 1)   # tokens per device
+    m = t_loc * topk                                # assigned rows/device
+    g_loc = max(E // ep, 1)                         # experts per device
+    f_loc = max(f // tp, 1) if f else f             # expert d_ff per device
+    bb = 2.0                                        # bf16 stream bytes
+
+    def row(kernel, dims, flops, byts):
+        ai = flops / byts if byts else 0.0
+        pred = spec.roofline_time(flops, byts)
+        r = {"kernel": kernel, "dims": dims, "flops": flops, "bytes": byts,
+             "ai": ai, "pred_ms": pred * 1e3,
+             "bound": ("compute" if flops / spec.peak_flops
+                       >= byts / spec.hbm_bw else "memory")}
+        if table is not None:
+            e = table.find(kernel, pplan.kernel.backend
+                           if pplan.kernel.backend != "ref" else "pallas",
+                           dims)
+            if e is not None:
+                r.update({"tiles": tuple(e["tiles"]),
+                          "measured_ms": e["time_ms"],
+                          "default_ms": e.get("default_time_ms"),
+                          "measured_bucket": "_".join(
+                              f"{k}{v}" for k, v in sorted(
+                                  e["bucket"].items())),
+                          "measured_hw": e.get("measured_hw", e.get("hw")),
+                          "achieved_frac": e.get("achieved_frac")})
+        return r
+
+    rows = []
+    # gate and up projections: one gmm each over the local expert stack
+    gmm_b = bb * (m * d + g_loc * d * f_loc + m * f_loc)
+    for name in ("gmm[gate]", "gmm[up]"):
+        rows.append(row("gmm", {"g": g_loc, "m": m, "k": d, "n": f_loc},
+                        2.0 * m * d * f_loc, gmm_b))
+        rows[-1]["kernel_instance"] = name
+    rows.append(row("gmm", {"g": g_loc, "m": m, "k": f_loc, "n": d},
+                    2.0 * m * f_loc * d,
+                    bb * (m * f_loc + g_loc * f_loc * d + m * d)))
+    rows[-1]["kernel_instance"] = "gmm[down]"
+    # fused SwiGLU: silu(gate) * up, ~5 flops/element in f32
+    rows.append(row("fused_swiglu", {"m": m, "n": f_loc},
+                    5.0 * m * f_loc, bb * 3.0 * m * f_loc))
+    rows[-1]["kernel_instance"] = "fused_swiglu"
+    # combine: weighted top-k reduction back to token order
+    rows.append(row("combine", {"t": t_loc, "k": topk, "d": d},
+                    2.0 * t_loc * topk * d,
+                    bb * (t_loc * topk * d + t_loc * d) + 4.0 * t_loc * topk))
+    rows[-1]["kernel_instance"] = "combine"
+    # dispatch: histogram + gather into expert order (bandwidth only)
+    rows.append(row("moe_dispatch", {"t": t_loc, "k": topk, "d": d},
+                    0.0, bb * 2.0 * m * d))
+    rows[-1]["kernel_instance"] = "moe_dispatch"
+    if cfg.num_heads:
+        nh_loc = max(cfg.num_heads // tp, 1)
+        hd = cfg.head_dim
+        rows.append(row("flash_attention",
+                        {"t": t_loc, "s": seq, "h": nh_loc, "hd": hd},
+                        4.0 * t_loc * seq * nh_loc * hd,
+                        bb * 4.0 * t_loc * nh_loc * hd
+                        + bb * 2.0 * t_loc * nh_loc * hd
+                        * max(seq // 512 - 1, 0)))
+        rows[-1]["kernel_instance"] = "flash_attention"
+    return {"hw": spec.name, "per": "MoE layer fwd, per device",
+            "tokens_per_device": t_loc, "rows": rows}

@@ -183,10 +183,14 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def print_parallel_plan(spec: str, arch: str, *, global_batch: int = 256,
-                        train_cfg=None) -> str:
+                        train_cfg=None, kernel_table: str = None) -> str:
     """Resolve a --parallel spec against ``arch`` and print the plan:
-    axes, per-param placement, projected bytes/device. Shape-only
-    (jax.eval_shape) — no allocation, no compile; safe as a CI smoke."""
+    axes, per-param placement, projected bytes/device, and (for MoE archs)
+    the per-kernel roofline attribution table. Shape-only
+    (jax.eval_shape) — no allocation, no compile; safe as a CI smoke.
+
+    ``kernel_table``: path to a tuning table for the measured columns,
+    'none' to force prediction-only, None for the committed default."""
     from repro.parallel.plan import ParallelPlan
     cfg = get_config(arch)
     pplan = ParallelPlan.parse(spec)
@@ -198,6 +202,55 @@ def print_parallel_plan(spec: str, arch: str, *, global_batch: int = 256,
     if pplan.pp > 1:
         text += "\n" + print_per_stage_costs(cfg, pplan,
                                              global_batch=global_batch)
+    if getattr(cfg, "is_moe", False):
+        text += "\n" + print_per_kernel_costs(
+            cfg, pplan, global_batch=global_batch, kernel_table=kernel_table)
+    return text
+
+
+def print_per_kernel_costs(cfg, pplan, *, global_batch: int,
+                           seq: int = 2048, kernel_table: str = None) -> str:
+    """Per-kernel roofline attribution (costmodel.per_kernel_costs): one
+    row per expert-path kernel with analytic FLOPs/bytes/AI, the predicted
+    time on the plan's HardwareSpec, and — when a tuning table entry covers
+    the kernel — the autotuned tiles, its measured time on the bench shape,
+    and the achieved-vs-peak fraction."""
+    from repro.kernels import autotune
+    from repro.launch.costmodel import per_kernel_costs
+    if kernel_table == "none":
+        table = None
+    elif kernel_table:
+        table = autotune.TuningTable.load(kernel_table)
+    else:
+        table = autotune.active_table()
+    rep = per_kernel_costs(cfg, pplan, global_batch=global_batch, seq=seq,
+                           table=table)
+    lines = [f"-- per-kernel roofline attribution [hw={rep['hw']}] "
+             f"({rep.get('per', '')}; tuning table: "
+             f"{'none' if table is None else table.path or 'in-memory'}) --"]
+    if not rep["rows"]:
+        lines.append(rep.get("note", "no kernel rows"))
+    else:
+        lines.append(f"{'kernel':16s} {'gflops':>8s} {'gbytes':>8s} "
+                     f"{'AI':>7s} {'pred':>9s} {'bound':>7s} "
+                     f"{'tuned tiles':>14s} {'measured':>9s} {'ach%':>6s}")
+        for r in rep["rows"]:
+            tiles = "x".join(str(t) for t in r["tiles"]) \
+                if r.get("tiles") else "-"
+            meas = f"{r['measured_ms']:7.1f}ms" if r.get("measured_ms") \
+                is not None else "-"
+            ach = f"{100 * r['achieved_frac']:5.1f}%" \
+                if r.get("achieved_frac") is not None else "-"
+            lines.append(
+                f"{r.get('kernel_instance', r['kernel']):16s} "
+                f"{r['flops'] / 1e9:8.2f} {r['bytes'] / 1e9:8.3f} "
+                f"{r['ai']:7.1f} {r['pred_ms']:7.3f}ms {r['bound']:>7s} "
+                f"{tiles:>14s} {meas:>9s} {ach:>6s}")
+        pred_total = sum(r["pred_ms"] for r in rep["rows"])
+        lines.append(f"predicted MoE-layer fwd total: {pred_total:.3f}ms "
+                     f"per device ({rep['tokens_per_device']} tokens/dev)")
+    text = "\n".join(lines)
+    print(text)
     return text
 
 
@@ -248,6 +301,10 @@ def main():
                          "ep=2') against --arch and print axes, per-param "
                          "placement and projected bytes/device; no compile")
     ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--kernel-table", default=None,
+                    help="tuning table for the per-kernel attribution's "
+                         "measured columns: a path, 'none' (prediction "
+                         "only), or omit for the committed default")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
@@ -264,7 +321,8 @@ def main():
 
     if args.parallel:
         print_parallel_plan(args.parallel, args.arch or "mula-7b-a1b",
-                            global_batch=args.global_batch)
+                            global_batch=args.global_batch,
+                            kernel_table=args.kernel_table)
         return
 
     records, failures = [], []

@@ -16,23 +16,141 @@ shape and apply a ring-model factor using the replica-group size n:
     all-to-all          bytes = result x (n-1)/n
     collective-permute  bytes = result
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
-ICI (values given by the task spec).
+Hardware constants live in the :data:`HARDWARE` registry (``HardwareSpec``):
+TPU v5e (the original task-spec numbers, still exported as the module-level
+``PEAK_FLOPS``/``HBM_BW``/``LINK_BW`` constants), the Aurora PVC tile from
+the source paper's hardware table, and a calibrated ``sim-cpu`` spec for
+the forced-host-device CI container (see ``calibrate_sim_cpu``).
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
 
-PEAK_FLOPS = 197e12        # bf16 per chip
-HBM_BW = 819e9             # bytes/s per chip
-LINK_BW = 50e9             # bytes/s per link
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """One machine's roofline constants + on-chip fast-memory budget.
+
+    ``vmem_bytes`` is the per-core software-managed fast memory a Pallas
+    kernel tiles into (TPU VMEM; the closest PVC analog is the per-tile L2
+    slice; for sim-cpu a per-core L2-ish figure). The kernel autotuner
+    prunes tile candidates whose double-buffered working set exceeds it,
+    and ``KernelPlan``'s guardrail warns/errors on the same budget.
+    """
+    name: str
+    peak_flops: float          # bf16 FLOP/s per chip/tile
+    hbm_bw: float              # bytes/s per chip/tile
+    link_bw: float             # bytes/s per link
+    vmem_bytes: int            # on-chip fast memory per core (see above)
+    description: str = ""
+
+    def roofline_time(self, flops: float, byts: float) -> float:
+        """Seconds the roofline model predicts for one kernel invocation:
+        max of the compute and memory terms (no overlap slack)."""
+        return max(flops / self.peak_flops, byts / self.hbm_bw)
+
+
+HARDWARE = {
+    # the original task-spec machine (kept as the default)
+    "tpu-v5e": HardwareSpec(
+        "tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+        vmem_bytes=16 * 2**20,
+        description="TPU v5e: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s ICI "
+                    "link, 16 MiB VMEM/core"),
+    # one tile of the Aurora node's Intel Data Center GPU Max 1550 (the
+    # paper's hardware table: 2 tiles/GPU, 6 GPUs/node) — per-tile halves
+    # of the 832 TF/s bf16 and 3.28 TB/s HBM2e figures; Xe Link per-link
+    # bandwidth; per-tile L2 slice as the fast-memory budget
+    "pvc-tile": HardwareSpec(
+        "pvc-tile", peak_flops=416e12, hbm_bw=1640e9, link_bw=26e9,
+        vmem_bytes=204 * 2**20,
+        description="Aurora PVC tile (Max 1550 / 2): 416 TF/s bf16, "
+                    "1.64 TB/s HBM2e, ~26 GB/s Xe Link, 204 MiB L2/tile"),
+    # the CI container's forced-host-device simulation. Numbers from
+    # calibrate_sim_cpu() on the reference runner (single-process XLA CPU
+    # matmul throughput + memcpy bandwidth), committed so analytics are
+    # deterministic; re-calibrate with bench_kernels.py (recorded in
+    # BENCH_kernels.json) when the runner changes.
+    "sim-cpu": HardwareSpec(
+        "sim-cpu", peak_flops=6.5e10, hbm_bw=1.1e10, link_bw=1e9,
+        vmem_bytes=32 * 2**20,
+        description="calibrated CI container CPU: ~65 GF/s f32 matmul, "
+                    "~11 GB/s copy bandwidth (see calibrate_sim_cpu)"),
+}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    if name not in HARDWARE:
+        raise ValueError(f"unknown hardware spec {name!r}; registered: "
+                         f"{', '.join(sorted(HARDWARE))}")
+    return HARDWARE[name]
+
+
+def gmm_working_set_bytes(tile_m: int, tile_k: int, tile_n: int, *,
+                          in_bytes: int = 2, acc_bytes: int = 4,
+                          double_buffer: bool = True) -> int:
+    """Analytic VMEM working set of one grouped-matmul grid step: the lhs
+    and rhs input tiles (double-buffered — the DMA of step i+1 overlaps the
+    compute of step i) plus the f32 accumulator tile (not double-buffered;
+    it lives across the k loop). This is the budget the autotuner prunes
+    candidates against and ``KernelPlan``'s guardrail checks."""
+    mult = 2 if double_buffer else 1
+    return ((tile_m * tile_k + tile_k * tile_n) * in_bytes * mult
+            + tile_m * tile_n * acc_bytes)
+
+
+def calibrate_sim_cpu(*, n: int = 1024, reps: int = 5) -> HardwareSpec:
+    """Measure this process's achievable f32 matmul FLOP/s and copy
+    bandwidth (median-of-N, block_until_ready) and return a HardwareSpec
+    for it. Used by bench_kernels.py to stamp the calibration the achieved
+    fractions in BENCH_kernels.json were computed against."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+
+    def median_time(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    mm = jax.jit(lambda a: a @ a)
+    t_mm = median_time(mm, x)
+    flops = 2.0 * n ** 3 / max(t_mm, 1e-9)
+    cp = jax.jit(lambda a: a + 1.0)
+    t_cp = median_time(cp, x)
+    bw = 2.0 * x.nbytes / max(t_cp, 1e-9)      # read + write
+    base = HARDWARE["sim-cpu"]
+    return HardwareSpec("sim-cpu", peak_flops=flops, hbm_bw=bw,
+                        link_bw=base.link_bw, vmem_bytes=base.vmem_bytes,
+                        description=f"calibrated in-process: matmul "
+                                    f"{flops / 1e9:.1f} GF/s, copy "
+                                    f"{bw / 1e9:.1f} GB/s")
+
+
+_V5E = HARDWARE["tpu-v5e"]
+PEAK_FLOPS = _V5E.peak_flops   # bf16 per chip (legacy constants: v5e)
+HBM_BW = _V5E.hbm_bw           # bytes/s per chip
+LINK_BW = _V5E.link_bw         # bytes/s per link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e8m0fnu": 1, "f4e2m1fn": 1, "s4": 1, "u4": 1,
 }
+# bytes assumed for a dtype token we do not recognize: conservative (f32-
+# sized) so the collective term over-counts rather than silently dropping
+# the instruction (the old behavior — see test_roofline.py)
+_UNKNOWN_DTYPE_BYTES = 4
 
 _COLL_RE = re.compile(
     r"=\s*(?:\()?\s*([a-z0-9\[\],{}x ]+?)\s*(?:\))?\s*"
@@ -43,16 +161,22 @@ _GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
-def _shape_bytes(type_str: str) -> int:
+def _shape_bytes(type_str: str, unknown: set | None = None) -> int:
+    """Bytes of an HLO result type (sums tuple components). A dtype token
+    we don't recognize is counted at a conservative 4 bytes/element —
+    never silently dropped — and recorded in ``unknown`` when given."""
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            if unknown is not None:
+                unknown.add(dt)
+            nb = _UNKNOWN_DTYPE_BYTES
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += n * nb
     return total
 
 
@@ -69,10 +193,18 @@ def _group_size(line: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-device communicated bytes by collective kind (ring model)."""
+    """Per-device communicated bytes by collective kind (ring model).
+
+    The returned dict maps kind -> bytes plus two extra keys: ``total``
+    (sum over the kinds) and ``unknown_dtypes`` — a sorted list of dtype
+    tokens that appeared in a collective's result shape but are not in
+    ``_DTYPE_BYTES``. Those elements are counted at a conservative
+    4 bytes each rather than dropped (the pre-fix behavior undercounted
+    the collective term to zero for e.g. fp8 all-gathers).
+    """
     out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
            "all-to-all": 0.0, "collective-permute": 0.0}
-    seen_done = set()
+    unknown: set = set()
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
@@ -80,7 +212,7 @@ def collective_bytes(hlo_text: str) -> dict:
         if "-done(" in line:   # async pair: count only the -start
             continue
         type_str, kind = m.group(1), m.group(2)
-        rb = _shape_bytes(type_str)
+        rb = _shape_bytes(type_str, unknown)
         n = _group_size(line)
         if kind == "all-gather":
             b = rb * (n - 1) / n
@@ -94,6 +226,7 @@ def collective_bytes(hlo_text: str) -> dict:
             b = rb
         out[kind] += b
     out["total"] = sum(out.values())
+    out["unknown_dtypes"] = sorted(unknown)
     return out
 
 

@@ -106,6 +106,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         opt_shard: str = None, opt_overlap: str = None,
         pp_schedule: str = None,
         pp_impl: str = None, moe_dispatch: str = None,
+        kernel_tiles: str = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
@@ -169,6 +170,15 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     elif moe_dispatch is not None and cfg.moe is not None:
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
             cfg.moe, dispatch=moe_dispatch))
+    if kernel_tiles is not None:
+        # 'auto' resolves tiles per shape bucket from the measured tuning
+        # table (kernels/autotune.py); 'TMxTKxTN' pins an explicit triple.
+        # Overrides a --parallel spec's tiles= option.
+        from repro.parallel.plan import _apply_tiles_token
+        if pplan is None:
+            pplan = ParallelPlan()
+        pplan = dataclasses.replace(
+            pplan, kernel=_apply_tiles_token(pplan.kernel, kernel_tiles))
     opt_shard = pplan.opt_shard if pplan is not None else (opt_shard
                                                            or "none")
 
@@ -231,6 +241,11 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     if plan is not None and plan.mesh is not None:
         step_fn = make_train_step(cfg, par, train, plan=plan,
                                   state_shardings=state_sh)
+    elif plan is not None:
+        # meshless plan (all axes 1): no shardings to install, but the plan
+        # still carries the KernelPlan (backend/tiles) that must scope the
+        # step trace — dropping it here would silently ignore --kernel-tiles
+        step_fn = jax.jit(make_train_step(cfg, par, train, plan=plan))
     else:
         step_fn = jax.jit(make_train_step(cfg, par, train))
     bsh = batch_sharding(rules)
@@ -388,7 +403,8 @@ def main():
                     help="declarative ParallelPlan spec, e.g. "
                          "'dp=2,pp=2,ep=2' or 'dp=2,ep=2,tp=2' (expert-TP); "
                          "axes: dp, pp, ep, tp, pod; options: opt=, "
-                         "schedule=, moe=, mb=, fsdp. Forces the device "
+                         "schedule=, moe=, tiles=, mb=, fsdp. Forces the "
+                         "device "
                          "product "
                          "as CPU host devices; pp>1 enables the jitted "
                          "pipeline schedule")
@@ -431,6 +447,15 @@ def main():
                          "no drops, naive-exact math). Overrides both the "
                          "model's MoEConfig.dispatch and a --parallel spec's "
                          "moe= option")
+    ap.add_argument("--kernel-tiles", default=None,
+                    help="Pallas kernel tile selection: 'auto' resolves "
+                         "tiles per (kernel, shape bucket) from the "
+                         "committed tuning table "
+                         "(src/repro/kernels/tuning_table.json; regenerate "
+                         "with benchmarks/bench_kernels.py --write-table), "
+                         "or an explicit 'TMxTKxTN' triple, e.g. "
+                         "128x512x512. Overrides a --parallel spec's "
+                         "tiles= option")
     ap.add_argument("--log-every", type=int, default=10,
                     help="print the step line (loss/gnorm/lr + MoE routing "
                          "telemetry: drops, max expert load) every N steps")
@@ -452,6 +477,7 @@ def main():
         opt_shard=args.opt_shard, opt_overlap=args.opt_overlap,
         pp_schedule=args.pp_schedule,
         pp_impl=args.pp_impl, moe_dispatch=args.moe_dispatch,
+        kernel_tiles=args.kernel_tiles,
         log_every=args.log_every, n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,
         inject_soft_at=args.inject_soft_at)

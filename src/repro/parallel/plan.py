@@ -57,10 +57,23 @@ class KernelPlan:
                   'pallas' — the Pallas kernels (gmm/combine/swiglu; flash
                   attention for forward-only paths).
     ``tile_*``    Pallas grouped-matmul tile sizes (MXU-aligned defaults).
+    ``tiles``     None — always use the explicit ``tile_*`` fields;
+                  'auto' — resolve tiles per (kernel, shape bucket) from
+                  the active measured tuning table (kernels/autotune.py) at
+                  trace time, falling back to the ``tile_*`` fields on any
+                  miss. An auto tile_m is only applied when it divides
+                  ``tile_m`` (the dispatch pads groups to ``tile_m``, so a
+                  non-divisor would break the gmm alignment contract).
     ``interpret`` None -> auto (True on CPU): kernels execute their Python
                   bodies — how this container validates TPU kernels.
     ``attn_impl`` 'blockwise' (pure-JAX online softmax, has a backward) |
                   'pallas' (forward-only flash kernel, serving/prefill).
+    ``hw``        HardwareSpec name (launch/roofline.py registry) whose
+                  VMEM budget the tile guardrail checks and whose roofline
+                  the per-kernel attribution predicts against.
+    ``strict``    guardrail escalation: a tile triple whose double-buffered
+                  working set exceeds the ``hw`` VMEM budget warns by
+                  default; with ``strict=True`` it raises.
     """
     backend: str = "ref"
     tile_m: int = 128
@@ -68,6 +81,9 @@ class KernelPlan:
     tile_n: int = 512
     interpret: Optional[bool] = None
     attn_impl: str = "blockwise"
+    tiles: Optional[str] = None
+    hw: str = "tpu-v5e"
+    strict: bool = False
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
@@ -80,11 +96,43 @@ class KernelPlan:
             if getattr(self, k) < 1:
                 raise ValueError(f"KernelPlan.{k} must be >= 1, "
                                  f"got {getattr(self, k)}")
+        if self.tiles not in (None, "auto"):
+            raise ValueError(f"KernelPlan.tiles must be None or 'auto', "
+                             f"got {self.tiles!r} (explicit tiles go in "
+                             f"tile_m/tile_k/tile_n)")
+        # VMEM-budget guardrail: the double-buffered working set of the
+        # explicit tile triple must fit the target hardware's fast memory
+        # (bf16 inputs, f32 accumulator — launch/roofline.py owns the math)
+        from repro.launch.roofline import (get_hardware,
+                                           gmm_working_set_bytes)
+        spec = get_hardware(self.hw)     # validates the name too
+        ws = gmm_working_set_bytes(self.tile_m, self.tile_k, self.tile_n)
+        if ws > spec.vmem_bytes:
+            msg = (f"KernelPlan tiles {self.tile_m}/{self.tile_k}/"
+                   f"{self.tile_n}: double-buffered working set "
+                   f"{ws / 2**20:.1f}MiB exceeds {spec.name} fast memory "
+                   f"{spec.vmem_bytes / 2**20:.0f}MiB — the kernel would "
+                   f"spill (shrink tile_k/tile_n or pick tiles='auto')")
+            if self.strict:
+                raise ValueError(msg)
+            import warnings
+            warnings.warn(msg, stacklevel=2)
 
     @property
     def moe_backend(self) -> str:
         """Stage-4/5 grouped-FFN backend this kernel plan selects."""
         return "pallas" if self.backend == "pallas" else "xla"
+
+    def resolve_tiles(self, kernel: str, dims) -> Optional[tuple]:
+        """Tile tuple for ``kernel`` at ``dims`` (a dim dict, e.g.
+        ``{"g": G, "m": M, "k": K, "n": N}``) from the active tuning table,
+        or None — the caller keeps its built-in defaults. Only consults the
+        table under ``tiles='auto'``; reads happen at trace time, so the
+        resolved tiles are baked into the jaxpr like the explicit fields."""
+        if self.tiles != "auto":
+            return None
+        from repro.kernels.autotune import lookup_tiles
+        return lookup_tiles(kernel, self.backend, dims)
 
 
 # The active kernel plan: a contextvar (scoped, restores on exit) over a
@@ -133,6 +181,25 @@ def use_kernel_plan(plan: Optional[KernelPlan]):
         yield plan
     finally:
         _ACTIVE_KERNEL_PLAN.reset(tok)
+
+
+def _apply_tiles_token(kernel: KernelPlan, value: str,
+                       spec: str = "") -> KernelPlan:
+    """Apply a ``tiles=`` token ('auto' or 'TMxTKxTN') to a KernelPlan —
+    shared by ``ParallelPlan.parse`` and ``launch/train.py --kernel-tiles``."""
+    import dataclasses
+    v = value.strip()
+    if v == "auto":
+        return dataclasses.replace(kernel, tiles="auto")
+    try:
+        tm, tk, tn = (int(x) for x in v.split("x"))
+    except ValueError:
+        where = f" in parallel spec {spec!r}" if spec else ""
+        raise ValueError(f"tiles={value!r}{where}: want 'auto' or an "
+                         f"explicit 'TMxTKxTN' triple, e.g. "
+                         f"tiles=128x512x512") from None
+    return dataclasses.replace(kernel, tiles=None, tile_m=tm, tile_k=tk,
+                               tile_n=tn)
 
 
 # ----------------------------------------------------------------------------
@@ -245,6 +312,8 @@ class ParallelPlan:
                 put("pp_impl", v)
             elif k in ("moe", "moe_dispatch"):
                 put("moe_dispatch", v)
+            elif k == "tiles":
+                put("tiles", v)
             elif k == "fsdp":
                 put("fsdp", v not in ("0", "false", "False"))
             else:
@@ -254,13 +323,18 @@ class ParallelPlan:
                     f"epso}}, overlap={{auto|off|ring|xla}}, "
                     f"schedule={{gpipe|1f1b}}, "
                     f"impl={{shardmap|masked}}, moe={{capacity|dropless}}, "
-                    f"mb=<int>, fsdp")
+                    f"tiles={{auto|TMxTKxTN}}, mb=<int>, fsdp")
         kw.update(overrides)
+        tiles = kw.pop("tiles", None)
+        if tiles is not None:
+            kern = kw.get("kernel", KernelPlan())
+            kw["kernel"] = _apply_tiles_token(kern, tiles, spec)
         return cls(**kw)
 
     def __str__(self) -> str:
-        """Canonical spec; ``ParallelPlan.parse(str(p)) == p`` (modulo the
-        kernel plan, which is not spec-addressable)."""
+        """Canonical spec; ``ParallelPlan.parse(str(p)) == p`` (modulo
+        kernel-plan fields other than the tile selection, which round-trips
+        via the ``tiles=`` token)."""
         parts = [f"{k}={getattr(self, k)}" for k in ("dp", "pp", "ep", "tp",
                                                      "pod")
                  if getattr(self, k) != 1]
@@ -276,6 +350,11 @@ class ParallelPlan:
             parts.append(f"impl={self.pp_impl}")
         if self.moe_dispatch is not None:
             parts.append(f"moe={self.moe_dispatch}")
+        k = self.kernel
+        if k.tiles == "auto":
+            parts.append("tiles=auto")
+        elif (k.tile_m, k.tile_k, k.tile_n) != (128, 512, 512):
+            parts.append(f"tiles={k.tile_m}x{k.tile_k}x{k.tile_n}")
         if self.microbatches != 1:
             parts.append(f"mb={self.microbatches}")
         if self.fsdp:

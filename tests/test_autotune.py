@@ -1,0 +1,326 @@
+"""Tests for the measured kernel autotuner (kernels/autotune.py) and its
+plumbing: shape buckets, tuning-table persistence and lookup fallback,
+VMEM candidate pruning, the KernelPlan guardrail + ``tiles='auto'``
+resolution, the ``tiles=`` ParallelPlan token, and end-to-end bit-identity
+of auto-vs-explicit tiles through a real train step."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as AT
+from repro.parallel.plan import KernelPlan, ParallelPlan, use_kernel_plan
+
+
+@pytest.fixture(autouse=True)
+def _isolated_table():
+    """Never let these tests see (or mutate) the committed table."""
+    prev = AT._ACTIVE[0]
+    AT.set_active_table(None)
+    yield
+    AT._ACTIVE[0] = prev
+
+
+def _entry(kernel="gmm", backend="pallas", dims=None, tiles=(64, 256, 512)):
+    dims = dims or {"g": 2, "m": 256, "k": 512, "n": 1792}
+    return {"kernel": kernel, "backend": backend,
+            "bucket": AT.bucket_dims(kernel, dims), "shape": dict(dims),
+            "tiles": list(tiles), "time_ms": 1.0,
+            "default_tiles": [128, 512, 512], "default_time_ms": 2.0,
+            "n_iters": 3, "hw": "tpu-v5e"}
+
+
+# --- buckets --------------------------------------------------------------
+
+def test_pow2_bucket():
+    assert [AT.pow2_bucket(n) for n in (1, 2, 3, 129, 1792)] == \
+        [1, 2, 4, 256, 2048]
+
+
+def test_bucket_key_order_and_rounding():
+    key = AT.bucket_key("gmm", {"g": 2, "m": 200, "k": 512, "n": 1792})
+    assert key == "g2_k512_m256_n2048"
+
+
+# --- tuning table ---------------------------------------------------------
+
+def test_table_add_replaces_same_bucket():
+    t = AT.TuningTable()
+    t.add(_entry(tiles=(64, 256, 512)))
+    t.add(_entry(tiles=(32, 512, 512)))
+    assert len(t.entries) == 1
+    assert t.entries[0]["tiles"] == [32, 512, 512]
+
+
+def test_table_lookup_exact_and_nearest_m():
+    t = AT.TuningTable()
+    t.add(_entry(dims={"g": 2, "m": 256, "k": 512, "n": 1792}))
+    # exact bucket (m=200 rounds into the m256 bucket)
+    assert t.lookup("gmm", "pallas",
+                    {"g": 2, "m": 200, "k": 512, "n": 1792}) == (64, 256, 512)
+    # m miss with all other dims equal: nearest-m fallback
+    assert t.lookup("gmm", "pallas",
+                    {"g": 2, "m": 4096, "k": 512, "n": 1792}) == (64, 256, 512)
+    # non-dynamic dim miss: full miss
+    assert t.lookup("gmm", "pallas",
+                    {"g": 2, "m": 256, "k": 99, "n": 1792}) is None
+    # backend mismatch: miss
+    assert t.lookup("gmm", "xla",
+                    {"g": 2, "m": 256, "k": 512, "n": 1792}) is None
+
+
+def test_table_save_load_round_trip(tmp_path):
+    t = AT.TuningTable(hw="pvc-tile")
+    t.add(_entry())
+    path = t.save(str(tmp_path / "table.json"))
+    back = AT.TuningTable.load(path)
+    assert back is not None
+    assert back.hw == "pvc-tile"
+    assert back.lookup("gmm", "pallas",
+                       {"g": 2, "m": 256, "k": 512, "n": 1792}) == \
+        (64, 256, 512)
+
+
+def test_table_load_version_mismatch_returns_none(tmp_path):
+    p = tmp_path / "stale.json"
+    p.write_text(json.dumps({"version": 0, "entries": []}))
+    with pytest.warns(UserWarning, match="version"):
+        assert AT.TuningTable.load(str(p)) is None
+    q = tmp_path / "garbage.json"
+    q.write_text("not json{")
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert AT.TuningTable.load(str(q)) is None
+
+
+# --- candidates + pruning -------------------------------------------------
+
+def test_gmm_candidates_respect_alignment_and_include_default():
+    dims = {"g": 2, "m": 256, "k": 512, "n": 1792}
+    cands = AT.gmm_candidates(dims)
+    assert (128, 512, 512) in cands
+    rows = dims["m"] // dims["g"]
+    assert all(rows % tm == 0 for tm, _, _ in cands)
+
+
+def test_prune_candidates_drops_oversized():
+    huge = (256, 2048, 2048)     # ~21 MiB working set
+    kept = AT.prune_candidates("gmm", [huge, (128, 512, 512)], hw="tpu-v5e")
+    assert kept == [(128, 512, 512)]
+    # the PVC tile's 204 MiB budget keeps both
+    assert len(AT.prune_candidates("gmm", [huge, (128, 512, 512)],
+                                   hw="pvc-tile")) == 2
+
+
+# --- active table + observed lookups --------------------------------------
+
+def test_lookup_tiles_observed_hit_and_miss():
+    t = AT.TuningTable()
+    t.add(_entry(dims={"g": 2, "m": 64, "k": 16, "n": 32}, tiles=(16, 16, 32)))
+    with AT.use_tuning_table(t), AT.observe_lookups() as seen:
+        hit = AT.lookup_tiles("gmm", "pallas",
+                              {"g": 2, "m": 64, "k": 16, "n": 32})
+        miss = AT.lookup_tiles("gmm", "pallas",
+                               {"g": 2, "m": 64, "k": 999, "n": 32})
+    assert hit == (16, 16, 32) and miss is None
+    assert [r["tiles"] for r in seen] == [(16, 16, 32), None]
+    assert seen[0]["bucket"] == "g2_k16_m64_n32"
+
+
+def test_lookup_tiles_without_table_is_none():
+    assert AT.lookup_tiles("gmm", "pallas",
+                           {"g": 2, "m": 64, "k": 16, "n": 32}) is None
+
+
+# --- KernelPlan: guardrail, tiles field, resolve_tiles --------------------
+
+def test_kernel_plan_vmem_guardrail_warns():
+    with pytest.warns(UserWarning, match="fast memory"):
+        KernelPlan(tile_m=1024, tile_k=4096, tile_n=4096)
+
+
+def test_kernel_plan_vmem_guardrail_strict_raises():
+    with pytest.raises(ValueError, match="fast memory"):
+        KernelPlan(tile_m=1024, tile_k=4096, tile_n=4096, strict=True)
+
+
+def test_kernel_plan_default_tiles_fit_silently():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        KernelPlan()
+
+
+def test_kernel_plan_tiles_field_validated():
+    KernelPlan(tiles="auto")
+    KernelPlan(tiles=None)
+    with pytest.raises(ValueError, match="tiles"):
+        KernelPlan(tiles="always")
+
+
+def test_resolve_tiles_only_when_auto():
+    t = AT.TuningTable()
+    t.add(_entry(dims={"g": 2, "m": 64, "k": 16, "n": 32}, tiles=(16, 16, 32)))
+    dims = {"g": 2, "m": 64, "k": 16, "n": 32}
+    with AT.use_tuning_table(t):
+        kp = KernelPlan(backend="pallas", tiles="auto")
+        assert kp.resolve_tiles("gmm", dims) == (16, 16, 32)
+        assert KernelPlan(backend="pallas").resolve_tiles("gmm", dims) is None
+
+
+# --- ParallelPlan tiles= token --------------------------------------------
+
+def test_plan_tiles_token_auto_round_trip():
+    plan = ParallelPlan.parse("dp=2,ep=2,tp=2,tiles=auto")
+    assert plan.kernel.tiles == "auto"
+    assert "tiles=auto" in str(plan)
+    assert ParallelPlan.parse(str(plan)) == plan
+
+
+def test_plan_tiles_token_explicit_round_trip():
+    plan = ParallelPlan.parse("dp=2,tiles=64x256x512")
+    assert (plan.kernel.tile_m, plan.kernel.tile_k, plan.kernel.tile_n) == \
+        (64, 256, 512)
+    assert plan.kernel.tiles is None
+    assert "tiles=64x256x512" in str(plan)
+    assert ParallelPlan.parse(str(plan)) == plan
+
+
+def test_plan_tiles_token_rejects_garbage():
+    with pytest.raises(ValueError, match="tiles"):
+        ParallelPlan.parse("dp=2,tiles=64x256")
+    with pytest.raises(ValueError, match="tiles"):
+        ParallelPlan.parse("dp=2,tiles=fast")
+
+
+# --- ops integration: auto tiles through the gmm wrapper ------------------
+
+def test_gmm_auto_tiles_applied_and_match_ref():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    G, M, K, N = 2, 64, 16, 32
+    t = AT.TuningTable()
+    t.add(_entry(dims={"g": G, "m": M, "k": K, "n": N}, tiles=(16, 16, 32)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (G, K, N))
+    gs = jnp.array([32, 32], jnp.int32)
+    kp = KernelPlan(backend="pallas", tile_m=16, tiles="auto")
+    with AT.use_tuning_table(t), use_kernel_plan(kp), \
+            AT.observe_lookups() as seen:
+        out = ops.gmm(x, w, gs)
+    fwd = [r for r in seen if r["kernel"] == "gmm"]
+    assert fwd and fwd[0]["tiles"] == (16, 16, 32)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gmm_ref(x, w, gs)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gmm_auto_tile_m_clamped_to_alignment():
+    """A table tile_m that does not divide the plan's tile_m (the dispatch
+    padding quantum) must be ignored — applying it would violate the
+    ``group_sizes % tile_m == 0`` kernel contract."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    G, M, K, N = 2, 64, 16, 32
+    t = AT.TuningTable()
+    t.add(_entry(dims={"g": G, "m": M, "k": K, "n": N}, tiles=(24, 16, 32)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (G, K, N))
+    gs = jnp.array([32, 32], jnp.int32)
+    kp = KernelPlan(backend="pallas", tile_m=16, tiles="auto")
+    with AT.use_tuning_table(t), use_kernel_plan(kp):
+        out = ops.gmm(x, w, gs)   # tm=24 dropped; tk/tn still applied
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gmm_ref(x, w, gs)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- end-to-end: bit-identical loss, auto vs explicit tiles ---------------
+
+@pytest.mark.slow
+def test_train_step_auto_tiles_bit_identical():
+    """``tiles='auto'`` with a table whose entries equal the plan's explicit
+    tiles must produce bit-identical losses to the explicit plan — the auto
+    path changes where tile sizes come from, never the math. The table is
+    built from an observed trace so every bucket the step consults (fwd +
+    bwd gmm, tgmm, swiglu, combine) is covered."""
+    import jax
+
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.train import init_state, make_train_step
+
+    cfg = reduced(get_config("mula-7b-a1b"), layers=1, d_model=64)
+    tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                     grad_reduce_dtype="float32", lr_peak=1e-3, lr_min=1e-4,
+                     warmup_steps=2, total_steps=4, seq_len=16,
+                     global_batch=2)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def run(tiles, table):
+        plan = ParallelPlan(
+            kernel=KernelPlan(backend="pallas", tiles=tiles)
+        ).resolve(cfg, global_batch=2)
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
+        with AT.use_tuning_table(table), AT.observe_lookups() as seen:
+            fn = make_train_step(cfg, None, tc, plan=plan)
+            losses = []
+            for _ in range(2):
+                state, m = fn(state, batch)
+                losses.append(float(m["loss"]))
+        return losses, seen
+
+    # explicit leg also discovers which (kernel, bucket) lookups the step
+    # would make, so the auto leg's table can cover every one of them
+    base_losses, _ = run(None, None)
+    _, observed = run("auto", AT.TuningTable())     # empty table: all misses
+    assert observed, "auto plan made no tile lookups — wiring broken"
+
+    table = AT.TuningTable()
+    kp = KernelPlan()
+    for r in observed:
+        if r["kernel"] == "gmm":
+            tiles = (kp.tile_m, kp.tile_k, kp.tile_n)
+        elif r["kernel"] == "tgmm":
+            tiles = (kp.tile_m, min(512, r["dims"]["k"]),
+                     min(512, r["dims"]["n"]))
+        else:
+            continue       # elementwise kernels: leave as fallback
+        table.add({"kernel": r["kernel"], "backend": "pallas",
+                   "bucket": AT.bucket_dims(r["kernel"], r["dims"]),
+                   "shape": dict(r["dims"]), "tiles": list(tiles),
+                   "time_ms": 1.0, "default_tiles": list(tiles),
+                   "default_time_ms": 1.0, "n_iters": 1, "hw": "tpu-v5e"})
+
+    auto_losses, seen = run("auto", table)
+    hits = [r for r in seen if r["tiles"] is not None]
+    assert hits, "auto leg hit no table entries"
+    assert auto_losses == base_losses, (auto_losses, base_losses)
+
+
+# --- autotune() itself (tiny shape so it stays fast) ----------------------
+
+@pytest.mark.slow
+def test_autotune_records_best_and_default():
+    dims = {"g": 2, "m": 32, "k": 16, "n": 16}
+    table = AT.autotune("gmm", [dims], candidates=[(16, 16, 16), (8, 16, 16)],
+                        n_iters=2, validate=True)
+    e = table.find("gmm", "pallas", dims)
+    assert e is not None
+    assert tuple(e["tiles"]) in ((16, 16, 16), (8, 16, 16))
+    # default tile_m legalized to the per-group row count (16) so the
+    # default timing is well-defined on this tiny shape
+    assert e["default_tiles"] == [16, 512, 512]
+    assert e["time_ms"] > 0 and e["default_time_ms"] > 0
+    assert e["gflops"] == pytest.approx(2 * 32 * 16 * 16 / 1e9)
+
+
+def test_autotune_unknown_kernel_raises():
+    with pytest.raises(ValueError, match="measurement adapter"):
+        AT.autotune("conv3d", [{"m": 8}])

@@ -1,0 +1,124 @@
+"""Unit tests for launch/roofline.py: the HLO collective parser against
+real HLO text fixtures (iota replica groups, async -start/-done pairs,
+tuple result shapes, unknown dtypes), plus the HardwareSpec registry and
+the analytic VMEM working-set model the autotuner/guardrail share."""
+import math
+
+import pytest
+
+from repro.launch import roofline as RL
+
+# --- HLO fixtures: the instruction formats XLA actually emits -------------
+
+HLO_BASIC = """
+HloModule m
+  %p = f32[1024,256]{1,0} parameter(0)
+  %ag = f32[1024,256]{1,0} all-gather(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = bf16[512]{0} all-reduce(%p), replica_groups={{0,1}}, to_apply=%add
+  %rs = f32[128]{0} reduce-scatter(%p), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %cp = f32[64]{0} collective-permute(%p), source_target_pairs={{0,1},{1,0}}
+"""
+
+HLO_IOTA = """
+  %ag = bf16[256]{0} all-gather(%p), replica_groups=[2,4]<=[8], dimensions={0}
+"""
+
+HLO_ASYNC = """
+  %ars = f32[1000]{0} all-reduce-start(%p), replica_groups={{0,1}}, to_apply=%add
+  %ard = f32[1000]{0} all-reduce-done(%ars)
+"""
+
+HLO_TUPLE = """
+  %ags = (f32[64]{0}, f32[256]{0}) all-gather-start(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[256]{0} all-gather-done(%ags)
+"""
+
+HLO_UNKNOWN_DTYPE = """
+  %ag = f8e3m4[100]{0} all-gather(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+"""
+
+
+def test_collective_bytes_ring_model():
+    c = RL.collective_bytes(HLO_BASIC)
+    # all-gather: 1024*256*4 bytes, n=4 -> *(3/4)
+    assert c["all-gather"] == pytest.approx(1024 * 256 * 4 * 3 / 4)
+    # all-reduce: 512*2 bytes, n=2 -> 2*(1/2)x
+    assert c["all-reduce"] == pytest.approx(2 * 512 * 2 * 1 / 2)
+    # reduce-scatter: 128*4 bytes, n=4 -> *(n-1)
+    assert c["reduce-scatter"] == pytest.approx(128 * 4 * 3)
+    # collective-permute: result bytes as-is
+    assert c["collective-permute"] == pytest.approx(64 * 4)
+    assert c["total"] == pytest.approx(
+        sum(v for k, v in c.items() if k not in ("total", "unknown_dtypes")))
+    assert c["unknown_dtypes"] == []
+
+
+def test_group_size_iota_format():
+    # replica_groups=[2,4]<=[8]: 2 groups of size 4
+    c = RL.collective_bytes(HLO_IOTA)
+    assert c["all-gather"] == pytest.approx(256 * 2 * 3 / 4)
+
+
+def test_async_pair_counted_once():
+    c = RL.collective_bytes(HLO_ASYNC)
+    # the -start carries the cost; the -done must not double it
+    assert c["all-reduce"] == pytest.approx(2 * 1000 * 4 * 1 / 2)
+
+
+def test_tuple_shape_sums_components():
+    c = RL.collective_bytes(HLO_TUPLE)
+    # (f32[64], f32[256]) start tuple: both components counted, n=4;
+    # the f32[256] -done line is skipped
+    assert c["all-gather"] == pytest.approx((64 + 256) * 4 * 3 / 4)
+
+
+def test_unknown_dtype_counted_not_dropped():
+    """Satellite fix: an unrecognized dtype used to zero out the
+    instruction's bytes silently; now it costs 4 B/elt and is surfaced."""
+    c = RL.collective_bytes(HLO_UNKNOWN_DTYPE)
+    assert c["unknown_dtypes"] == ["f8e3m4"]
+    assert c["all-gather"] == pytest.approx(100 * 4 * 3 / 4)
+    assert c["total"] > 0
+
+
+def test_shape_bytes_narrow_dtypes():
+    assert RL._shape_bytes("f8e4m3fn[16]") == 16
+    assert RL._shape_bytes("s4[8]") == 8        # byte-padded storage
+    assert RL._shape_bytes("pred[10]") == 10
+
+
+def test_group_size_defaults_to_two():
+    assert RL._group_size("all-reduce(%x), to_apply=%add") == 2
+    assert RL._group_size(
+        "all-reduce(%x), replica_groups={{0,1,2}}, to_apply=%add") == 3
+
+
+# --- HardwareSpec registry + working-set model ----------------------------
+
+def test_hardware_registry():
+    v5e = RL.get_hardware("tpu-v5e")
+    assert v5e.peak_flops == RL.PEAK_FLOPS
+    assert v5e.vmem_bytes == 16 * 2**20
+    pvc = RL.get_hardware("pvc-tile")
+    # per-tile: half of the Max 1550's 832 TF/s bf16
+    assert pvc.peak_flops == pytest.approx(416e12)
+    assert RL.get_hardware("sim-cpu").name == "sim-cpu"
+    with pytest.raises(ValueError, match="unknown hardware"):
+        RL.get_hardware("tpu-v9000")
+
+
+def test_roofline_time_is_max_of_terms():
+    hw = RL.HardwareSpec("t", peak_flops=100.0, hbm_bw=10.0, link_bw=1.0,
+                         vmem_bytes=1)
+    assert hw.roofline_time(1000.0, 1.0) == pytest.approx(10.0)   # compute
+    assert hw.roofline_time(1.0, 1000.0) == pytest.approx(100.0)  # memory
+
+
+def test_gmm_working_set_bytes():
+    # inputs double-buffered at 2 B, f32 accumulator single-buffered
+    ws = RL.gmm_working_set_bytes(128, 512, 512)
+    assert ws == (128 * 512 + 512 * 512) * 2 * 2 + 128 * 512 * 4
+    assert ws < RL.get_hardware("tpu-v5e").vmem_bytes  # default plan fits
+    single = RL.gmm_working_set_bytes(128, 512, 512, double_buffer=False)
+    assert single == (128 * 512 + 512 * 512) * 2 + 128 * 512 * 4
+    assert not math.isnan(ws)

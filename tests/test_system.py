@@ -71,7 +71,9 @@ def test_roofline_collective_parser():
     assert c["all-reduce"] == pytest.approx(2 * 256 * 4 * 3 / 4)
     assert c["reduce-scatter"] == pytest.approx(32 * 4 * 7)
     assert c["collective-permute"] == pytest.approx(64 * 2)
-    assert c["total"] == sum(v for k, v in c.items() if k != "total")
+    assert c["unknown_dtypes"] == []
+    assert c["total"] == sum(v for k, v in c.items()
+                             if k not in ("total", "unknown_dtypes"))
 
 
 def test_nan_failure_aborts_training():
