@@ -98,24 +98,35 @@ def run(report):
 # measured: the autotuner on production shape buckets
 # ---------------------------------------------------------------------------
 
+# buckets the tgmm (weight-gradient) autotune also measures: tiny for CI
+# coverage plus the flagship arch's expert shapes, whose tgmm rows
+# ops._gmm_bwd resolves under tiles='auto'. The rest stay gmm-only to
+# bound interpret-mode bench time.
+TGMM_BUCKETS = ("tiny", "mula-7b-a1b/gate-up", "mula-7b-a1b/down")
+
+
 def measure(buckets: dict, *, n_iters: int = 5, hw: str = "tpu-v5e") -> dict:
     measured_hw = calibrate_sim_cpu()
     print(f"calibration: {measured_hw.description}")
     table = autotune.TuningTable(hw=hw)
     points = []
-    for name, dims in buckets.items():
+    jobs = [("gmm", name, dims) for name, dims in buckets.items()]
+    jobs += [("tgmm", name, dims) for name, dims in buckets.items()
+             if name in TGMM_BUCKETS]
+    for kernel, name, dims in jobs:
         table = autotune.autotune(
-            "gmm", [dims], backend="pallas", n_iters=n_iters, hw=hw,
+            kernel, [dims], backend="pallas", n_iters=n_iters, hw=hw,
             measured_hw=measured_hw, validate=True, table=table,
             default_tiles=DEFAULT_TILES,
-            log=lambda m: print(f"[{name}] {m}"))
-        e = table.find("gmm", "pallas", dims)
+            log=lambda m, tag=f"{kernel}:{name}": print(f"[{tag}] {m}"))
+        e = table.find(kernel, "pallas", dims)
         if e is None:
-            raise SystemExit(f"bucket {name}: no candidate survived")
+            raise SystemExit(f"{kernel} bucket {name}: no candidate "
+                             f"survived")
         ws = gmm_working_set_bytes(*e["tiles"])
         points.append({
-            "name": name, "kernel": "gmm", "backend": "pallas",
-            "bucket": autotune.bucket_key("gmm", dims), "shape": dims,
+            "name": name, "kernel": kernel, "backend": "pallas",
+            "bucket": autotune.bucket_key(kernel, dims), "shape": dims,
             "default_tiles": e["default_tiles"],
             "default_ms": e["default_time_ms"],
             "best_tiles": e["tiles"], "best_ms": e["time_ms"],
@@ -171,7 +182,8 @@ def main(argv=None):
     for p in result["kernel_points"]:
         ach = (f" achieved={100 * p['achieved_frac']:.1f}%"
                if p.get("achieved_frac") is not None else "")
-        print(f"{p['name']:16s} default {p['default_ms']:7.1f}ms "
+        print(f"{p['kernel'] + ':' + p['name']:24s} "
+              f"default {p['default_ms']:7.1f}ms "
               f"{'x'.join(map(str, p['default_tiles']))} -> best "
               f"{p['best_ms']:7.1f}ms "
               f"{'x'.join(map(str, p['best_tiles']))} "

@@ -244,10 +244,133 @@ def check_moe(fresh: dict, base: dict, tol: float, moe_ratio: float) -> list:
     return errors
 
 
+def check_census(fresh: dict, base: dict, census_tol: float) -> list:
+    """Gate ANALYSIS_census.json (the Shardlint trace baseline).
+
+    Structural (tight): every baseline plan present in the fresh census;
+    per-collective-kind instruction counts exactly equal (a GSPMD change
+    that adds or removes a collective should fail loudly, with the kind
+    named); zero sharding-contract violations in the fresh census, and
+    the declared contract set unchanged. Bytes (ring model) get a
+    ``--census-tol`` factor per kind — shape-bucket padding may legally
+    move a few bytes without changing the program's structure.
+    """
+    errors = []
+    fresh_pts = {p["spec"]: p for p in fresh.get("census_points", [])}
+    for b in base.get("census_points", []):
+        spec = b["spec"]
+        f = fresh_pts.get(spec)
+        if f is None:
+            errors.append(f"census plan {spec!r}: in baseline but missing "
+                          f"from the fresh census (matrix dropout)")
+            continue
+        for v in f.get("violations", []):
+            errors.append(f"census plan {spec!r}: contract violation: {v}")
+        if sorted(f.get("contracts", [])) != sorted(b.get("contracts", [])):
+            errors.append(
+                f"census plan {spec!r}: declared contract set changed: "
+                f"baseline {sorted(b.get('contracts', []))} vs fresh "
+                f"{sorted(f.get('contracts', []))}")
+        for kind in sorted(set(b.get("counts", {})) | set(f.get("counts", {}))):
+            bc = b.get("counts", {}).get(kind, 0)
+            fc = f.get("counts", {}).get(kind, 0)
+            if fc != bc:
+                errors.append(
+                    f"census plan {spec!r}: {kind} count {fc} != baseline "
+                    f"{bc} — the lowered program's collective structure "
+                    f"changed")
+        for kind, bb in b.get("ring_bytes", {}).items():
+            fb = f.get("ring_bytes", {}).get(kind, 0.0)
+            if bb > 0 and not (bb / census_tol <= fb <= bb * census_tol):
+                errors.append(
+                    f"census plan {spec!r}: {kind} ring bytes {fb:.3e} "
+                    f"outside {census_tol}x of baseline {bb:.3e}")
+    return errors
+
+
+def check_pair(fresh: dict, base: dict, args):
+    """Kind-detected checks for one (fresh, baseline) pair ->
+    (kind, errors) — kind is None when the JSON shape is unrecognized."""
+    if "census_points" in fresh:
+        return "census", check_census(fresh, base, args.census_tol)
+    if "kernel_points" in fresh:
+        return "kernels", check_kernels(fresh, base, args.tol,
+                                        args.kernel_parity)
+    if "dispatch_points" in fresh:
+        return "moe", check_moe(fresh, base, args.tol, args.moe_ratio)
+    if "executor_points" in fresh or "points" in fresh:
+        return "pp", check_pp(fresh, base, args.tol, args.min_speedup)
+    if "modes" in fresh:
+        errors = check_epso(fresh, base, args.tol)
+        errors += check_epso_time(fresh, args.epso_parity, args.epso_vs_none)
+        return "epso", errors
+    return None, []
+
+
+def discover_baselines(baseline_dir: str) -> list:
+    """Committed gate files: every BENCH_*.json / ANALYSIS_*.json in
+    ``baseline_dir`` (the repo root in CI)."""
+    import glob
+    import os
+    out = []
+    for pat in ("BENCH_*.json", "ANALYSIS_*.json"):
+        out += glob.glob(os.path.join(baseline_dir, pat))
+    return sorted(out)
+
+
+def check_all(args) -> int:
+    """--all: gate every committed baseline against its fresh counterpart
+    ``<fresh-dir>/<STEM>.fresh.json``. A baseline whose fresh file is
+    missing FAILS — a bench silently dropping out of CI used to pass."""
+    import os
+    baselines = discover_baselines(args.baseline_dir)
+    if not baselines:
+        print(f"check_regression --all: no BENCH_*.json/ANALYSIS_*.json "
+              f"under {args.baseline_dir!r}")
+        return 2
+    failures = 0
+    for bpath in baselines:
+        stem = os.path.splitext(os.path.basename(bpath))[0]
+        fpath = os.path.join(args.fresh_dir, stem + ".fresh.json")
+        if not os.path.exists(fpath):
+            print(f"BENCH DROPOUT: baseline {bpath} has no fresh run at "
+                  f"{fpath} — the bench silently fell out of CI")
+            failures += 1
+            continue
+        fresh, base = _load(fpath), _load(bpath)
+        kind, errors = check_pair(fresh, base, args)
+        if kind is None:
+            print(f"unrecognized bench JSON shape in {fpath}")
+            failures += 1
+            continue
+        if errors:
+            print(f"BENCH REGRESSION ({kind}, {stem}): "
+                  f"{len(errors)} violation(s)")
+            for e in errors:
+                print(" -", e)
+            failures += 1
+        else:
+            print(f"bench gate ok ({kind}, {stem})")
+    if failures:
+        print(f"check_regression --all: {failures} of {len(baselines)} "
+              f"baseline(s) failed")
+        return 1
+    print(f"check_regression --all: {len(baselines)} baseline(s) ok")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True)
-    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", default=None)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="gate every committed BENCH_*/ANALYSIS_* baseline "
+                         "against <fresh-dir>/<STEM>.fresh.json; a missing "
+                         "fresh file fails (no silent bench dropout)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="--all: directory holding the committed baselines")
+    ap.add_argument("--fresh-dir", default="/tmp",
+                    help="--all: directory holding the fresh runs")
     ap.add_argument("--tol", type=float, default=2.5,
                     help="step-time regression factor vs baseline")
     ap.add_argument("--min-speedup", type=float, default=1.0,
@@ -265,23 +388,19 @@ def main(argv=None):
     ap.add_argument("--kernel-parity", type=float, default=1.05,
                     help="max autotuned/default kernel-time ratio per "
                          "bucket (in-run, so tighter than --tol)")
+    ap.add_argument("--census-tol", type=float, default=1.5,
+                    help="ring-bytes factor per collective kind for the "
+                         "census gate (counts are gated exactly)")
     args = ap.parse_args(argv)
 
+    if args.all:
+        return check_all(args)
+    if not args.fresh or not args.baseline:
+        ap.error("--fresh and --baseline are required (or use --all)")
+
     fresh, base = _load(args.fresh), _load(args.baseline)
-    if "kernel_points" in fresh:
-        errors = check_kernels(fresh, base, args.tol, args.kernel_parity)
-        kind = "kernels"
-    elif "dispatch_points" in fresh:
-        errors = check_moe(fresh, base, args.tol, args.moe_ratio)
-        kind = "moe"
-    elif "executor_points" in fresh or "points" in fresh:
-        errors = check_pp(fresh, base, args.tol, args.min_speedup)
-        kind = "pp"
-    elif "modes" in fresh:
-        errors = check_epso(fresh, base, args.tol)
-        errors += check_epso_time(fresh, args.epso_parity, args.epso_vs_none)
-        kind = "epso"
-    else:
+    kind, errors = check_pair(fresh, base, args)
+    if kind is None:
         print(f"unrecognized bench JSON shape in {args.fresh}")
         return 2
 

@@ -1,0 +1,20 @@
+"""Shardlint — static analysis for traced train steps and repo source.
+
+Two layers (ISSUE 9 / ARCHITECTURE.md "Static analysis"):
+
+* **Trace analysis** (:mod:`repro.analysis.census`): lower + compile the
+  train step for a ParallelPlan on shape stand-ins (zero allocation),
+  walk the compiled HLO with :func:`repro.launch.roofline.walk_collectives`
+  and the jaxpr with :func:`repro.analysis.census.jaxpr_census`, and check
+  the resulting *collective census* against the plan's declared
+  **sharding contracts** (:mod:`repro.analysis.contracts`) and the
+  analytic cost model. Baselines live in ``ANALYSIS_census.json`` and are
+  gated by ``benchmarks/check_regression.py`` like the BENCH files.
+
+* **AST lint** (:mod:`repro.analysis.lint`): dependency-free source rules
+  (``SL001``–``SL004``) encoding the repo's hard-won sharding lessons —
+  raw ``shard_map`` imports, ``ragged_dot`` outside its allowlist, host
+  transfers inside traced step-building modules, writers to the
+  deprecated kernel-config aliases. Runs in CI's lint job without jax.
+"""
+from repro.analysis.contracts import CONTRACTS, check_entry  # noqa: F401

@@ -1,0 +1,301 @@
+"""Collective census of a lowered+compiled train step (Shardlint layer 1).
+
+For a ParallelPlan spec this builds the train step the trainer would run
+(``make_train_step(..., plan=...)``), lowers it on sharded
+ShapeDtypeStruct stand-ins (``launch/specs.py`` — zero allocation), and
+walks both representations:
+
+* the **jaxpr** (:func:`jaxpr_census`) — primitive counts with a
+  ``/manual`` suffix inside shard_map regions, which is where the
+  ``ragged_dot``-reaches-GSPMD and stray-callback contracts look;
+* the **compiled HLO** (:func:`hlo_census`) — per-collective-kind counts,
+  ring-model bytes and max single payload, through the same
+  :func:`repro.launch.roofline.walk_collectives` pass the roofline uses,
+  so census bytes and roofline bytes can never diverge.
+
+The entry also records the analytic expectation from ``launch/costmodel``
+and the full fp32 parameter bytes (the ``epso-no-full-param-gather``
+threshold), then runs the plan's declared contracts
+(:mod:`repro.analysis.contracts`).
+
+The committed 4-plan matrix baseline:
+
+    PYTHONPATH=src python -m repro.analysis.census --matrix \\
+        --out ANALYSIS_census.json
+
+is gated by ``benchmarks/check_regression.py`` (exact per-kind counts,
+bytes within tolerance, zero contract violations), so a GSPMD behavior
+change across the jax version matrix fails CI with a readable diff.
+
+Uses a reduced mula-7b-a1b (d_model=64, seq=32, batch=8): small enough to
+compile in ~10s/plan on the CI CPU, big enough that every collective the
+full model emits (EP dispatch, expert-TP, EPSO ring, pp loop) appears.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.analysis import contracts as C
+
+# The committed plan matrix (ANALYSIS_census.json). pp needs mb divisible
+# by stages; the two overlap variants pin the EPSO gather/scatter overlap
+# ring on and off so a regression in either path is caught structurally.
+MATRIX = (
+    "dp=8",
+    "dp=2,pp=2,ep=2,opt=epso,mb=4",
+    "dp=2,ep=2,tp=2,opt=epso,overlap=ring",
+    "dp=2,ep=2,tp=2,opt=epso,overlap=off",
+)
+
+# jaxpr primitives worth keeping in the baseline: the contract inputs
+# (ragged_dot, callbacks) plus the collectives that tell overlap-ring
+# apart from overlap-off. Everything else churns across jax versions
+# without meaning anything for sharding.
+_INTERESTING = ("ragged_dot", "callback", "shard_map", "ppermute",
+                "all_gather", "all_to_all", "psum", "reduce_scatter",
+                "infeed", "outfeed")
+
+
+def jaxpr_census(closed_jaxpr) -> dict:
+    """Count primitives in a ClosedJaxpr, recursing into sub-jaxprs in
+    equation params; primitives inside a ``shard_map`` get a ``/manual``
+    suffix (collectives there are hand-placed, not GSPMD-inserted)."""
+    prims: dict = {}
+
+    def walk(jx, manual):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            key = name + ("/manual" if manual else "")
+            prims[key] = prims.get(key, 0) + 1
+            man = manual or name == "shard_map"
+            for v in eqn.params.values():
+                for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if hasattr(x, "jaxpr"):
+                        walk(x.jaxpr, man)
+                    elif hasattr(x, "eqns"):
+                        walk(x, man)
+
+    walk(closed_jaxpr.jaxpr, False)
+    return prims
+
+
+def interesting_prims(prims: dict) -> dict:
+    return {k: v for k, v in sorted(prims.items())
+            if any(s in k for s in _INTERESTING)}
+
+
+def hlo_census(hlo_text: str) -> dict:
+    """Counts / ring-model bytes / max single payload per collective kind,
+    plus host-transfer instructions — one pass over the compiled HLO via
+    the shared roofline walker."""
+    from repro.launch import roofline as RL
+    counts = {k: 0 for k in RL.COLLECTIVE_KINDS}
+    ring = {k: 0.0 for k in RL.COLLECTIVE_KINDS}
+    max_payload = {k: 0 for k in RL.COLLECTIVE_KINDS}
+    unknown: set = set()
+    for instr in RL.walk_collectives(hlo_text, unknown):
+        counts[instr.kind] += 1
+        ring[instr.kind] += instr.ring_bytes
+        max_payload[instr.kind] = max(max_payload[instr.kind],
+                                      instr.result_bytes)
+    ring["total"] = sum(v for k, v in ring.items() if k != "total")
+    host = []
+    for line in hlo_text.splitlines():
+        if C.is_host_transfer_line(line):
+            host.append(line.strip()[:160])
+    return {"counts": counts, "ring_bytes": ring,
+            "max_payload": max_payload, "host_transfers": host,
+            "unknown_dtypes": sorted(unknown)}
+
+
+def full_param_bytes(cfg) -> int:
+    """Total fp32 master-parameter bytes (shape-only eval)."""
+    import jax
+    import numpy as np
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return int(sum(int(np.prod(l.shape)) * 4
+                   for l in jax.tree.leaves(shapes)))
+
+
+def collect_plan_census(spec: str, *, arch: str = "mula-7b-a1b",
+                        d_model: int = 64, seq: int = 32,
+                        batch: int = 8) -> dict:
+    """Build + lower + compile the train step for ``spec`` and return its
+    census entry (JSON-ready dict), contracts already evaluated.
+
+    Needs the plan's device count forced onto the CPU backend *before*
+    backend init (``launch.mesh.ensure_host_devices`` / the mesh8 test
+    fixture / the census CLI all arrange this)."""
+    import jax
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.configs.base import InputShape
+    from repro.launch.specs import input_specs, state_specs
+    from repro.parallel.plan import ParallelPlan
+    from repro.train import make_train_step
+
+    cfg = reduced(get_config(arch), d_model=d_model)
+    tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                     grad_reduce_dtype="float32", seq_len=seq,
+                     global_batch=batch)
+    pplan = ParallelPlan.parse(spec)
+    cfg = pplan.apply_to_model(cfg)
+    plan = pplan.resolve(cfg, global_batch=batch)
+    step = make_train_step(cfg, None, tc, plan=plan)
+
+    shape = InputShape("census", seq, batch, "train")
+    opt_mode = plan.opt_shard if plan.mesh is not None else "none"
+    state = state_specs(cfg, tc, plan.rules, opt_mode)
+    bat = input_specs(cfg, shape, plan.rules)
+
+    if not hasattr(step, "lower"):
+        step = jax.jit(step)
+    t0 = time.time()
+    lowered = step.lower(state, bat)
+    prims = jaxpr_census(jax.make_jaxpr(step)(state, bat))
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    entry = {
+        "spec": str(pplan),
+        "arch": arch,
+        "mesh": {} if plan.mesh is None else
+                {k: int(v) for k, v in plan.mesh.shape.items()},
+        "devices": pplan.num_devices,
+        "opt_overlap_impl": getattr(step, "opt_overlap_impl", None),
+        "full_param_bytes": full_param_bytes(cfg),
+        "jaxpr_prims": interesting_prims(prims),
+        "contracts": list(pplan.contracts()),
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+    }
+    entry.update(hlo_census(compiled.as_text()))
+
+    entry["analytic_total"] = 0.0
+    if plan.mesh is not None:
+        from repro.launch import costmodel as CM
+        # the analytic probes shard the per-microbatch batch over the batch
+        # axes — clamp nmb the same way dryrun.lower_one does
+        nmb = pplan.microbatches
+        shards = 1
+        for a in plan.rules.batch_axes:
+            shards *= plan.mesh.shape[a]
+        while nmb > 1 and batch % (nmb * shards) != 0:
+            nmb //= 2
+        cm = CM.analyze(cfg, shape, plan.rules, opt_mode=opt_mode,
+                        microbatches=nmb)
+        entry["analytic_total"] = float(
+            cm["coll_per_chip"].get("total", 0.0))
+    entry["violations"] = C.violations(entry)
+    return entry
+
+
+def run_matrix(specs=MATRIX, *, log=print, **kw) -> dict:
+    """Census every plan in ``specs`` -> the ANALYSIS_census.json payload
+    (``census_points`` + a ``meta`` block recording the jax versions the
+    baseline was produced on)."""
+    import jax
+    import jaxlib
+    points = []
+    for spec in specs:
+        log(f"[census] {spec} ...")
+        e = collect_plan_census(spec, **kw)
+        log(f"[census] {spec}: " + ", ".join(
+            f"{k}={v}" for k, v in e["counts"].items() if v) +
+            f", ring_total={e['ring_bytes']['total']:.3e}" +
+            (f", VIOLATIONS={len(e['violations'])}" if e["violations"]
+             else ""))
+        points.append(e)
+    return {
+        "meta": {
+            "jax": jax.__version__,
+            "jaxlib": getattr(jaxlib, "__version__", "?"),
+            "arch": kw.get("arch", "mula-7b-a1b"),
+            "d_model": kw.get("d_model", 64),
+            "seq_len": kw.get("seq", 32),
+            "global_batch": kw.get("batch", 8),
+        },
+        "census_points": points,
+    }
+
+
+def format_entry(e: dict) -> str:
+    """Human-readable one-plan census block (dryrun --analyze output)."""
+    lines = [f"== collective census: {e['spec']} =="]
+    mesh = " x ".join(f"{k}={v}" for k, v in (e.get("mesh") or {}).items())
+    lines.append(f"mesh     : {mesh or 'none (single device)'}"
+                 f"  overlap_impl={e.get('opt_overlap_impl')}")
+    lines.append(f"{'kind':20s} {'count':>6s} {'ring bytes':>12s} "
+                 f"{'max payload':>12s}")
+    for k in sorted(e["counts"]):
+        if e["counts"][k]:
+            lines.append(f"{k:20s} {e['counts'][k]:6d} "
+                         f"{e['ring_bytes'][k]:12.3e} "
+                         f"{e['max_payload'][k]:12d}")
+    tot = e["ring_bytes"]["total"]
+    an = e.get("analytic_total") or 0.0
+    ratio = f" (x{tot / an:.2f} of analytic {an:.3e})" if an else ""
+    lines.append(f"ring-model total: {tot:.3e} B/device{ratio}")
+    lines.append(f"full fp32 param bytes: {e['full_param_bytes']}")
+    if e.get("jaxpr_prims"):
+        lines.append("jaxpr: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(e["jaxpr_prims"].items())))
+    for cid in e.get("contracts", []):
+        lines.append(f"contract {cid:28s} "
+                     f"{'FAIL' if any(cid in v for v in e['violations']) else 'ok'}")
+    for v in e.get("violations", []):
+        lines.append(f"VIOLATION: {v}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.census",
+        description="collective census + sharding-contract check of "
+                    "lowered train steps")
+    ap.add_argument("--plan", action="append", default=None,
+                    help="ParallelPlan spec to census (repeatable)")
+    ap.add_argument("--matrix", action="store_true",
+                    help=f"census the committed baseline matrix: "
+                         f"{'; '.join(MATRIX)}")
+    ap.add_argument("--arch", default="mula-7b-a1b")
+    ap.add_argument("--out", default=None,
+                    help="write the census JSON here (the baseline file)")
+    args = ap.parse_args(argv)
+
+    specs = list(args.plan or [])
+    if args.matrix or not specs:
+        specs = list(MATRIX)
+
+    # the plans run in-process: force enough host devices before the
+    # backend wakes up (no-op if the caller already set XLA_FLAGS)
+    from repro.launch.mesh import ensure_host_devices
+    from repro.parallel.plan import ParallelPlan
+    ensure_host_devices(max(ParallelPlan.parse(s).num_devices
+                            for s in specs))
+
+    data = run_matrix(specs, arch=args.arch)
+    print()
+    for e in data["census_points"]:
+        print(format_entry(e))
+        print()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    nviol = sum(len(e["violations"]) for e in data["census_points"])
+    if nviol:
+        print(f"census: {nviol} contract violation(s)", file=sys.stderr)
+        return 1
+    print(f"census ok: {len(data['census_points'])} plan(s), "
+          f"all contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

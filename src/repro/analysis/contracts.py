@@ -1,0 +1,179 @@
+"""Sharding contracts — declarative properties of a lowered train step.
+
+Each contract is a named predicate over a *census entry* (the plain dict
+``repro.analysis.census.collect_plan_census`` produces and
+``ANALYSIS_census.json`` stores), so the same checks run on a freshly
+traced step and on a loaded baseline file. A check returns a list of
+violation strings (empty = holds); every message leads with the contract
+id so CI output and the injection tests can flag failures *by name*.
+
+Which contracts apply to a plan is declared by
+``ParallelPlan.contracts()`` — the plan is the single source of truth for
+its own invariants, the same way it owns mesh axes and kernel knobs.
+
+The registry (see ARCHITECTURE.md for the incident behind each rule):
+
+===========================  ==============================================
+id                           property of the lowered program
+===========================  ==============================================
+epso-no-full-param-gather    under ``opt=epso`` no single all-gather's
+                             payload reaches the full fp32 parameter
+                             bytes — the PR 7 regression (eager GSPMD
+                             update tail re-gathering every master shard)
+                             expressed structurally instead of as a
+                             step-time delta
+no-gspmd-ragged-dot          no ``ragged_dot`` primitive outside a manual
+                             (shard_map) region: XLA's SPMD partitioner
+                             rewrites ragged_dot's group_sizes operand
+                             incorrectly on ep/tp meshes (PR 6)
+no-host-transfer             no infeed/outfeed/send/recv or host-callback
+                             custom-calls inside the step — a stray
+                             ``jax.debug``/``device_get`` serializes every
+                             step on the host sync
+coll-vs-costmodel            measured collective bytes within ``tol``x of
+                             ``launch/costmodel``'s analytic expectation
+                             in either direction (a silent GSPMD behavior
+                             change shows up here before it shows up as a
+                             mystery slowdown)
+===========================  ==============================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+# measured census / analytic-costmodel byte ratio must stay inside
+# [1/tol, tol]. The matrix plans sit at 0.52-0.58 on the reference jax
+# (the analytic model charges idealized per-chip rings; GSPMD emits fewer,
+# larger fused collectives), so the ISSUE's 2x would sit right on the
+# boundary — 3x keeps the gate meaningful without flapping.
+COSTMODEL_TOLERANCE = 3.0
+
+# HLO custom-call targets / instruction substrings that move data to the
+# host. Plain custom-calls (TopK & friends) are device-side and benign —
+# matching all of them would false-positive every top-k router.
+_HOST_CC_PATTERNS = ("callback", "xla_python", "host", "infeed", "outfeed")
+
+
+@dataclass(frozen=True)
+class Contract:
+    """One sharding contract: id, what it guards, and the check."""
+    id: str
+    description: str
+    check: Callable[[dict], List[str]]
+
+
+CONTRACTS: Dict[str, Contract] = {}
+
+
+def _register(cid: str, description: str):
+    def deco(fn):
+        CONTRACTS[cid] = Contract(cid, description, fn)
+        return fn
+    return deco
+
+
+@_register("epso-no-full-param-gather",
+           "EPSO: no all-gather whose payload reaches full-param bytes")
+def _epso_no_full_param_gather(entry: dict) -> List[str]:
+    fp = entry.get("full_param_bytes", 0)
+    if not fp:
+        return []
+    mx = (entry.get("max_payload") or {}).get("all-gather", 0)
+    if mx >= fp:
+        return [f"epso-no-full-param-gather: all-gather payload {mx} B >= "
+                f"full fp32 param bytes {fp} B — the optimizer is "
+                f"re-materializing unsharded masters (plan "
+                f"{entry.get('spec', '?')!r}); the bucketed overlap path "
+                f"moves shards with ppermute rings, never a full gather"]
+    return []
+
+
+@_register("no-gspmd-ragged-dot",
+           "no ragged_dot primitive outside a manual shard_map region")
+def _no_gspmd_ragged_dot(entry: dict) -> List[str]:
+    prims = entry.get("jaxpr_prims") or {}
+    bad = {k: v for k, v in prims.items()
+           if "ragged_dot" in k and not k.endswith("/manual")}
+    return [f"no-gspmd-ragged-dot: {k} traced {v}x in GSPMD (auto) "
+            f"context on plan {entry.get('spec', '?')!r} — the SPMD "
+            f"partitioner corrupts its group_sizes operand on ep/tp "
+            f"meshes; route through kernels.ops or a manual region"
+            for k, v in sorted(bad.items())]
+
+
+@_register("no-host-transfer",
+           "no host transfers or callbacks inside the traced step")
+def _no_host_transfer(entry: dict) -> List[str]:
+    out = [f"no-host-transfer: HLO host transfer in step: {t}"
+           for t in entry.get("host_transfers") or []]
+    prims = entry.get("jaxpr_prims") or {}
+    out += [f"no-host-transfer: callback primitive {k} traced {v}x "
+            f"inside the step"
+            for k, v in sorted(prims.items()) if "callback" in k]
+    return out
+
+
+@_register("coll-vs-costmodel",
+           f"census bytes within {COSTMODEL_TOLERANCE}x of the analytic "
+           f"cost model")
+def _coll_vs_costmodel(entry: dict) -> List[str]:
+    analytic = entry.get("analytic_total") or 0.0
+    measured = (entry.get("ring_bytes") or {}).get("total", 0.0)
+    if analytic <= 0 or measured <= 0:
+        return []
+    ratio = measured / analytic
+    tol = entry.get("costmodel_tol") or COSTMODEL_TOLERANCE
+    if ratio > tol or ratio < 1.0 / tol:
+        return [f"coll-vs-costmodel: measured collective bytes "
+                f"{measured:.3e} vs analytic {analytic:.3e} "
+                f"(ratio {ratio:.2f}) diverge beyond {tol}x on plan "
+                f"{entry.get('spec', '?')!r}"]
+    return []
+
+
+def is_host_transfer_line(line: str) -> bool:
+    """True for an HLO instruction line that moves data to/from the host:
+    infeed/outfeed/send/recv ops, or a custom-call whose target matches a
+    host/callback pattern. Used by the census's HLO walk."""
+    s = line.strip()
+    if " = " not in s:
+        return False
+    body = s.split(" = ", 1)[1]
+    head = body.split("(", 1)[0].strip().split() if "(" in body else []
+    op = head[-1] if head else ""
+    base = op.split("-start")[0].split("-done")[0]
+    if base in ("infeed", "outfeed", "send", "recv"):
+        return True
+    if "custom-call" in body and "custom_call_target=" in body:
+        target = body.split("custom_call_target=", 1)[1][:120].lower()
+        return any(p in target for p in _HOST_CC_PATTERNS)
+    return False
+
+
+def check_entry(entry: dict, ids=None) -> Dict[str, List[str]]:
+    """Run contracts against one census entry.
+
+    ``ids`` defaults to the entry's own ``contracts`` list (what the plan
+    declared at collection time), falling back to every registered
+    contract. Returns {contract_id: [violation, ...]} with every requested
+    id present (empty list = contract holds). Unknown ids raise — a
+    baseline naming a contract this build doesn't know is itself a drift.
+    """
+    if ids is None:
+        ids = entry.get("contracts") or sorted(CONTRACTS)
+    out: Dict[str, List[str]] = {}
+    for cid in ids:
+        if cid not in CONTRACTS:
+            raise KeyError(f"unknown sharding contract {cid!r}; registered: "
+                           f"{', '.join(sorted(CONTRACTS))}")
+        out[cid] = CONTRACTS[cid].check(entry)
+    return out
+
+
+def violations(entry: dict, ids=None) -> List[str]:
+    """Flat list of violation strings for ``entry`` (see check_entry)."""
+    out: List[str] = []
+    for _, msgs in sorted(check_entry(entry, ids).items()):
+        out.extend(msgs)
+    return out

@@ -155,12 +155,13 @@ class TuningTable:
                 raw = json.load(f)
         except (OSError, ValueError) as e:
             warnings.warn(f"tuning table {path!r} unreadable ({e}); "
-                          f"falling back to default tiles")
+                          f"falling back to default tiles", stacklevel=2)
             return None
         if raw.get("version") != TABLE_VERSION:
             warnings.warn(f"tuning table {path!r} has version "
                           f"{raw.get('version')!r}, want {TABLE_VERSION}; "
-                          f"ignoring it (regenerate with bench_kernels.py)")
+                          f"ignoring it (regenerate with bench_kernels.py)",
+                          stacklevel=2)
             return None
         return cls(hw=raw.get("hw", "tpu-v5e"),
                    entries=list(raw.get("entries", [])), path=path)
@@ -362,10 +363,81 @@ def _legalize_gmm(dims: Dict[str, int],
     return (max(tm, 1), tiles[1], tiles[2])
 
 
-_MEASURE = {"gmm": measure_gmm}
-_CANDIDATES = {"gmm": gmm_candidates}
-_FLOPS = {"gmm": gmm_flops}
-_LEGALIZE = {"gmm": _legalize_gmm}
+def _tgmm_inputs(dims: Dict[str, int]):
+    import jax
+    import jax.numpy as jnp
+    g, m, k, n = dims["g"], dims["m"], dims["k"], dims["n"]
+    k0, k1 = jax.random.split(jax.random.PRNGKey(1))
+    lhs = jax.random.normal(k0, (m, k), jnp.bfloat16)
+    rhs = jax.random.normal(k1, (m, n), jnp.bfloat16)
+    gs = jnp.full((g,), m // g, jnp.int32)
+    return lhs, rhs, gs
+
+
+def measure_tgmm(dims: Dict[str, int], tiles: Tuple[int, int, int], *,
+                 n_iters: int = 5, validate: bool = False) -> float:
+    """Median ms of one tgmm (transposed grouped matmul — the gmm weight
+    gradient: out[g] = lhs[rows of g]^T @ rhs[rows of g]) at ``dims`` with
+    an explicit tile triple. Mirrors ``ops._gmm_bwd``'s invocation exactly
+    (pad K/N, tile->group scalar prefetch, empty-group zero-fill) so the
+    table rows that ``_gmm_bwd`` resolves under ``tiles='auto'`` are
+    measured on the same program it traces."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    from repro.kernels.gmm import tgmm_pallas
+
+    lhs, rhs, gs = _tgmm_inputs(dims)
+    G, M, K, N = dims["g"], dims["m"], dims["k"], dims["n"]
+    tm, tk, tn = tiles
+    tk = min(tk, K)
+    tn = min(tn, N)
+
+    def fn(x, dy, group_sizes):
+        xp = ops._pad_to(x, tk, 1)
+        dyp = ops._pad_to(dy, tn, 1)
+        gids = ops._tile_group_ids(group_sizes, M // tm, tm)
+        out = tgmm_pallas(xp, dyp, gids, G, tile_m=tm, tile_k=tk,
+                          tile_n=tn, interpret=ops._interpret())
+        out = jnp.where((group_sizes > 0)[:, None, None], out, 0)
+        return out[:, :K, :N]
+
+    jitted = jax.jit(fn)
+    if validate:
+        import numpy as np
+        got = np.asarray(jitted(lhs, rhs, gs), dtype=np.float32)
+        want = np.asarray(ref.tgmm_ref(lhs, rhs, gs, G), dtype=np.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+    return _median_time_ms(jitted, (lhs, rhs, gs), n_iters)
+
+
+def tgmm_flops(dims: Dict[str, int]) -> float:
+    # sum_g rows_g x K x N multiply-adds == M x K x N total
+    return 2.0 * dims["m"] * dims["k"] * dims["n"]
+
+
+def tgmm_candidates(dims: Dict[str, int]) -> List[Tuple[int, int, int]]:
+    """(tile_m, tile_k, tile_n) candidates for a tgmm measurement shape:
+    tile_m under the same group-alignment contract as gmm (it tiles the
+    shared row dim); tile_k/tile_n tile the *output* (G, K, N) block and
+    may exceed K/N (the wrapper pads). ``_gmm_bwd``'s built-in 512/512
+    defaults are always included so parity is decidable in-run."""
+    rows = dims["m"] // max(dims.get("g", 1), 1)
+    tms = _divisors_of(rows, (32, 64, 128, 256)) or [rows]
+    tks = sorted({min(t, pow2_bucket(dims["k"])) for t in (256, 512)}
+                 | {dims["k"]})
+    tns = sorted({min(t, pow2_bucket(dims["n"])) for t in (256, 512)}
+                 | {dims["n"]})
+    cands = {(tm, tk, tn) for tm in tms for tk in tks for tn in tns}
+    cands.add(_legalize_gmm(dims, (128, 512, 512)))
+    return sorted(cands)
+
+
+_MEASURE = {"gmm": measure_gmm, "tgmm": measure_tgmm}
+_CANDIDATES = {"gmm": gmm_candidates, "tgmm": tgmm_candidates}
+_FLOPS = {"gmm": gmm_flops, "tgmm": tgmm_flops}
+_LEGALIZE = {"gmm": _legalize_gmm, "tgmm": _legalize_gmm}
 
 
 def autotune(kernel: str, shapes: Sequence[Dict[str, int]],

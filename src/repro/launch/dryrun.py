@@ -300,6 +300,11 @@ def main():
                     help="resolve a ParallelPlan spec (e.g. 'dp=2,pp=2,"
                          "ep=2') against --arch and print axes, per-param "
                          "placement and projected bytes/device; no compile")
+    ap.add_argument("--analyze", action="store_true",
+                    help="with --parallel: also lower+compile the reduced "
+                         "train step and print the collective census and "
+                         "sharding-contract verdicts (repro.analysis); "
+                         "exits non-zero on a contract violation")
     ap.add_argument("--global-batch", type=int, default=256)
     ap.add_argument("--kernel-table", default=None,
                     help="tuning table for the per-kernel attribution's "
@@ -323,6 +328,17 @@ def main():
         print_parallel_plan(args.parallel, args.arch or "mula-7b-a1b",
                             global_batch=args.global_batch,
                             kernel_table=args.kernel_table)
+        if args.analyze:
+            # Shardlint layer 1 on the same plan: census the lowered
+            # reduced step and print per-contract verdicts. The module's
+            # 512-device force (line 2) already covers any plan size.
+            from repro.analysis import census as AC
+            entry = AC.collect_plan_census(args.parallel,
+                                           arch=args.arch or "mula-7b-a1b")
+            print()
+            print(AC.format_entry(entry))
+            if entry["violations"]:
+                sys.exit(1)
         return
 
     records, failures = [], []

@@ -160,6 +160,9 @@ _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
 
 def _shape_bytes(type_str: str, unknown: set | None = None) -> int:
     """Bytes of an HLO result type (sums tuple components). A dtype token
@@ -192,6 +195,60 @@ def _group_size(line: str) -> int:
     return 2
 
 
+@dataclass(frozen=True)
+class CollectiveInstr:
+    """One collective instruction from a compiled-HLO walk.
+
+    ``result_bytes`` is the (per-device) payload of the instruction's
+    result type (tuple components summed); ``ring_bytes`` applies the
+    ring-model factor for ``group_size`` (the module-docstring table).
+    Async ``-start``/``-done`` pairs surface as ONE record (the start).
+    """
+    kind: str            # one of COLLECTIVE_KINDS
+    result_bytes: int
+    group_size: int
+    ring_bytes: float
+    is_async: bool = False
+
+
+def ring_model_bytes(kind: str, result_bytes: float, n: int) -> float:
+    """Ring-model communicated bytes for one collective (see module
+    docstring for the per-kind factors)."""
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if kind == "all-reduce":
+        return 2 * result_bytes * (n - 1) / n
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(result_bytes)
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def walk_collectives(hlo_text: str, unknown: set | None = None):
+    """Yield a :class:`CollectiveInstr` per collective instruction in
+    ``hlo_text`` — the one HLO-walking pass shared by the roofline's
+    ``collective_bytes`` totals and the static analyzer's census
+    (``repro.analysis.census``), so their byte accounting can never
+    diverge. ``-done`` halves of async pairs are skipped; dtype tokens not
+    in ``_DTYPE_BYTES`` are counted at 4 B/elt and recorded in ``unknown``
+    when given."""
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:   # async pair: count only the -start
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(type_str, unknown)
+        n = _group_size(line)
+        yield CollectiveInstr(kind=kind, result_bytes=rb, group_size=n,
+                              ring_bytes=ring_model_bytes(kind, rb, n),
+                              is_async="-start(" in line)
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device communicated bytes by collective kind (ring model).
 
@@ -202,29 +259,10 @@ def collective_bytes(hlo_text: str) -> dict:
     4 bytes each rather than dropped (the pre-fix behavior undercounted
     the collective term to zero for e.g. fp8 all-gathers).
     """
-    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
-           "all-to-all": 0.0, "collective-permute": 0.0}
+    out = {k: 0.0 for k in COLLECTIVE_KINDS}
     unknown: set = set()
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        if "-done(" in line:   # async pair: count only the -start
-            continue
-        type_str, kind = m.group(1), m.group(2)
-        rb = _shape_bytes(type_str, unknown)
-        n = _group_size(line)
-        if kind == "all-gather":
-            b = rb * (n - 1) / n
-        elif kind == "reduce-scatter":
-            b = rb * (n - 1)
-        elif kind == "all-reduce":
-            b = 2 * rb * (n - 1) / n
-        elif kind == "all-to-all":
-            b = rb * (n - 1) / n
-        else:
-            b = rb
-        out[kind] += b
+    for instr in walk_collectives(hlo_text, unknown):
+        out[instr.kind] += instr.ring_bytes
     out["total"] = sum(out.values())
     out["unknown_dtypes"] = sorted(unknown)
     return out

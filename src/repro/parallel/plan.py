@@ -411,6 +411,24 @@ class ParallelPlan:
         return dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=self.moe_dispatch))
 
+    def contracts(self) -> Tuple[str, ...]:
+        """Sharding-contract ids (repro.analysis.contracts registry) the
+        lowered step must satisfy under this plan. The plan declares its
+        own invariants so the census (``repro.analysis.census``), the
+        ``dryrun --analyze`` report and the CI gate all check the same
+        set; contract-id strings are stable — they are stored in
+        ANALYSIS_census.json baselines."""
+        ids = ["no-host-transfer"]
+        if self.num_devices > 1:
+            ids.append("coll-vs-costmodel")
+        if self.ep > 1 or self.tp > 1:
+            # the ragged_dot GSPMD hazard only bites when expert buffers
+            # are actually sharded (see core/moe.py's dropless notes)
+            ids.append("no-gspmd-ragged-dot")
+        if self.opt_shard == "epso":
+            ids.append("epso-no-full-param-gather")
+        return tuple(ids)
+
     # ---- resolution ----------------------------------------------------------
     def validate_model(self, cfg) -> None:
         """Plan-vs-model divisibility checks, with errors that say what to

@@ -185,8 +185,9 @@ class ServeEngine:
 
     # ---- request intake -----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
-               sampling: SamplingParams = SamplingParams(),
+               sampling: Optional[SamplingParams] = None,
                arrival_time: float = 0.0) -> int:
+        sampling = sampling if sampling is not None else SamplingParams()
         if len(prompt) == 0:
             raise ValueError("empty prompt: the first token is sampled from "
                              "the last prompt position, so one is required")

@@ -1,0 +1,248 @@
+"""Shardlint layer 1: sharding contracts, the HLO/jaxpr census, and the
+ANALYSIS_census.json regression gate.
+
+The acceptance test for the whole pipeline is the *injection* test: take
+the committed EPSO census entry, splice in a full-parameter all-gather
+(the PR 7 regression's structural signature), and the contract machinery
+must flag it BY NAME ("epso-no-full-param-gather") — no step-time
+measurement involved.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+from repro.analysis import census as C
+from repro.analysis import contracts as K
+from repro.parallel.plan import ParallelPlan
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks"))
+import check_regression as CR  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "ANALYSIS_census.json")
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def _entry(baseline, frag):
+    for e in baseline["census_points"]:
+        if frag in e["spec"]:
+            return copy.deepcopy(e)
+    raise AssertionError(f"no census entry matching {frag!r}")
+
+
+# --- the committed baseline is self-consistent ----------------------------
+
+def test_baseline_covers_matrix_and_is_clean(baseline):
+    specs = [e["spec"] for e in baseline["census_points"]]
+    assert specs == [str(ParallelPlan.parse(s)) for s in C.MATRIX]
+    for e in baseline["census_points"]:
+        assert e["violations"] == [], e["spec"]
+        # re-running the contracts on the stored entry reproduces clean
+        assert K.violations(e) == [], e["spec"]
+        assert list(e["contracts"]) == \
+            list(ParallelPlan.parse(e["spec"]).contracts())
+
+
+# --- injection: the PR 7 regression, expressed structurally ---------------
+
+def test_injected_full_param_gather_flagged_by_name(baseline):
+    """A deliberately-introduced full-param all-gather in the EPSO step is
+    flagged by contract id, naming the plan."""
+    e = _entry(baseline, "opt=epso,overlap=ring")
+    assert K.violations(e) == []                   # clean before injection
+    e["max_payload"]["all-gather"] = e["full_param_bytes"]
+    msgs = K.violations(e)
+    assert len(msgs) == 1
+    assert msgs[0].startswith("epso-no-full-param-gather:")
+    assert e["spec"] in msgs[0]
+    # one byte under the full-param payload is still legal (bucketed
+    # shard movement can approach but never reach the full gather)
+    e["max_payload"]["all-gather"] = e["full_param_bytes"] - 1
+    assert K.violations(e) == []
+
+
+def test_injected_ragged_dot_in_auto_context(baseline):
+    e = _entry(baseline, "tp=2,opt=epso,overlap=off")
+    e["jaxpr_prims"]["ragged_dot"] = 2
+    msgs = K.violations(e)
+    assert any(m.startswith("no-gspmd-ragged-dot:") for m in msgs)
+    # inside a manual (shard_map) region the same primitive is fine
+    del e["jaxpr_prims"]["ragged_dot"]
+    e["jaxpr_prims"]["ragged_dot/manual"] = 2
+    assert K.violations(e) == []
+
+
+def test_injected_host_transfer(baseline):
+    e = _entry(baseline, "dp=8")
+    e["host_transfers"] = ["outfeed"]
+    e["jaxpr_prims"]["pure_callback"] = 1
+    msgs = K.violations(e)
+    assert sum(m.startswith("no-host-transfer:") for m in msgs) == 2
+
+
+def test_costmodel_divergence_both_directions(baseline):
+    e = _entry(baseline, "dp=8")
+    analytic = e["analytic_total"]
+    e["ring_bytes"]["total"] = analytic * (K.COSTMODEL_TOLERANCE + 1)
+    assert any(m.startswith("coll-vs-costmodel:")
+               for m in K.violations(e))
+    e["ring_bytes"]["total"] = analytic / (K.COSTMODEL_TOLERANCE + 1)
+    assert any(m.startswith("coll-vs-costmodel:")
+               for m in K.violations(e))
+
+
+def test_check_entry_rejects_unknown_contract(baseline):
+    e = _entry(baseline, "dp=8")
+    with pytest.raises(KeyError, match="unknown sharding contract"):
+        K.check_entry(e, ids=["no-such-contract"])
+
+
+# --- ParallelPlan.contracts(): the plan declares its own invariants -------
+
+@pytest.mark.parametrize("spec,expected", [
+    ("dp=8", ("no-host-transfer", "coll-vs-costmodel")),
+    ("dp=1", ("no-host-transfer",)),
+    ("dp=2,ep=2,tp=2,opt=epso",
+     ("no-host-transfer", "coll-vs-costmodel", "no-gspmd-ragged-dot",
+      "epso-no-full-param-gather")),
+    ("dp=4,tp=2",
+     ("no-host-transfer", "coll-vs-costmodel", "no-gspmd-ragged-dot")),
+])
+def test_plan_contracts(spec, expected):
+    assert ParallelPlan.parse(spec).contracts() == expected
+    for cid in expected:
+        assert cid in K.CONTRACTS
+
+
+# --- hlo_census over synthetic HLO ----------------------------------------
+
+HLO_SNIPPET = """\
+HloModule census_fixture
+ENTRY main {
+  ag = f32[256]{0} all-gather(p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  ar-start = f32[64]{0} all-reduce-start(p1), replica_groups={{0,1}}, to_apply=add
+  ar-done = f32[64]{0} all-reduce-done(ar-start)
+  out = f32[8]{0} outfeed(tok), outfeed_config=""
+  cc = f32[4]{0} custom-call(p2), custom_call_target="xla_python_cpu_callback"
+  topk = (f32[8]{0}, s32[8]{0}) custom-call(p3), custom_call_target="TopK"
+}
+"""
+
+
+def test_hlo_census_counts_bytes_and_host_transfers():
+    cen = C.hlo_census(HLO_SNIPPET)
+    assert cen["counts"]["all-gather"] == 1
+    assert cen["counts"]["all-reduce"] == 1        # start/done pair = one
+    # ring bytes: ag r(n-1)/n with r=1024B n=4; ar 2r(n-1)/n with r=256B n=2
+    assert cen["ring_bytes"]["all-gather"] == 1024 * 3 / 4
+    assert cen["ring_bytes"]["all-reduce"] == 2 * 256 / 2
+    assert cen["max_payload"]["all-gather"] == 1024
+    assert len(cen["host_transfers"]) == 2         # outfeed + callback, not TopK
+    assert cen["unknown_dtypes"] == []
+
+
+@pytest.mark.parametrize("line,expect", [
+    ("  o = f32[8]{0} outfeed(t), outfeed_config=\"\"", True),
+    ("  s = f32[8]{0} send(t, tok), channel_id=1", True),
+    ("  c = f32[4] custom-call(x), custom_call_target=\"TopK\"", False),
+    ("  c = f32[4] custom-call(x), custom_call_target=\"xla_python_cpu_callback\"", True),
+    ("  ROOT t = (f32[4]) tuple(a)", False),
+    ("no-equals-here", False),
+])
+def test_is_host_transfer_line(line, expect):
+    assert K.is_host_transfer_line(line) is expect
+
+
+# --- the ANALYSIS_census.json CI gate (check_regression) ------------------
+
+def _census_errors(fresh, base, tol=1.5):
+    return CR.check_census(fresh, base, tol)
+
+
+def test_gate_self_round_trip(baseline):
+    assert _census_errors(copy.deepcopy(baseline), baseline) == []
+
+
+def test_gate_flags_count_change(baseline):
+    fresh = copy.deepcopy(baseline)
+    e = fresh["census_points"][0]
+    e["counts"]["all-gather"] += 1
+    errs = _census_errors(fresh, baseline)
+    assert len(errs) == 1
+    assert "all-gather count" in errs[0] and e["spec"] in errs[0]
+
+
+def test_gate_flags_matrix_dropout(baseline):
+    fresh = copy.deepcopy(baseline)
+    gone = fresh["census_points"].pop(2)
+    errs = _census_errors(fresh, baseline)
+    assert len(errs) == 1
+    assert "matrix dropout" in errs[0] and gone["spec"] in errs[0]
+
+
+def test_gate_flags_fresh_violations_and_contract_drift(baseline):
+    fresh = copy.deepcopy(baseline)
+    e = fresh["census_points"][1]
+    e["violations"] = ["epso-no-full-param-gather: injected"]
+    e["contracts"] = [c for c in e["contracts"]
+                      if c != "no-gspmd-ragged-dot"]
+    errs = _census_errors(fresh, baseline)
+    assert any("contract violation" in m for m in errs)
+    assert any("contract set changed" in m for m in errs)
+
+
+def test_gate_ring_bytes_tolerance(baseline):
+    fresh = copy.deepcopy(baseline)
+    e = fresh["census_points"][0]
+    kind = next(k for k, v in e["ring_bytes"].items()
+                if k != "total" and v > 0)
+    e["ring_bytes"][kind] *= 1.4                   # inside 1.5x: fine
+    assert _census_errors(fresh, baseline) == []
+    e["ring_bytes"][kind] *= 2.0                   # now ~2.8x: flagged
+    errs = _census_errors(fresh, baseline)
+    assert any("ring bytes" in m and kind in m for m in errs)
+
+
+def test_check_pair_detects_census_kind(baseline):
+    class A:
+        census_tol = 1.5
+    kind, errs = CR.check_pair(copy.deepcopy(baseline), baseline, A)
+    assert kind == "census" and errs == []
+
+
+# --- end-to-end: trace one real plan under 8 forced devices ---------------
+
+@pytest.mark.slow
+def test_collect_plan_census_end_to_end(mesh8):
+    """Lower+compile the EPSO ring plan on 8 forced host devices and run
+    the full census: the declared contracts hold, the all-gather payloads
+    stay far below the full-param bytes, and the analytic cost model
+    agrees within tolerance."""
+    out = mesh8("""
+import json
+from repro.analysis import census as C
+e = C.collect_plan_census("dp=2,ep=2,tp=2,opt=epso,overlap=ring")
+print(json.dumps({
+    "violations": e["violations"],
+    "contracts": e["contracts"],
+    "ag_max": e["max_payload"].get("all-gather", 0),
+    "fp": e["full_param_bytes"],
+    "total": e["ring_bytes"]["total"],
+    "analytic": e["analytic_total"],
+}))
+""")
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got["violations"] == []
+    assert "epso-no-full-param-gather" in got["contracts"]
+    assert 0 < got["ag_max"] < got["fp"]
+    assert got["total"] > 0 and got["analytic"] > 0

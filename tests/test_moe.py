@@ -41,7 +41,7 @@ def test_impl_equivalence_dropless(setup):
         for be in ("xla", "ragged", "pallas"):
             out, _ = M.moe_dense_capacity(p, x, cfg.moe, backend=be)
             np.testing.assert_allclose(out, ref_out, atol=1e-4, err_msg=be)
-            g = jax.grad(lambda p: (M.moe_dense_capacity(
+            g = jax.grad(lambda p, be=be: (M.moe_dense_capacity(
                 p, x, cfg.moe, backend=be)[0] ** 2).sum())(p)
             for k in ("router", "gate", "up", "down"):
                 np.testing.assert_allclose(g[k], ref_g[k], atol=1e-3,

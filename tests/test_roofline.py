@@ -122,3 +122,55 @@ def test_gmm_working_set_bytes():
     single = RL.gmm_working_set_bytes(128, 512, 512, double_buffer=False)
     assert single == (128 * 512 + 512 * 512) * 2 + 128 * 512 * 4
     assert not math.isnan(ws)
+
+
+# --- walk_collectives: the reusable HLO pass the census shares ------------
+
+# async collective-permute start/done pair + a tuple-sharded all-gather
+# output: the exact formats the refactor must keep counting once each
+HLO_ASYNC_CP = """
+  %cps = bf16[32,128]{1,0} collective-permute-start(%p), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %cpd = bf16[32,128]{1,0} collective-permute-done(%cps)
+  %ags = (f32[64]{0}, f32[256]{0}) all-gather-start(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[256]{0} all-gather-done(%ags)
+  %ag2 = f32[16]{0} all-gather(%q), replica_groups={{0,1}}, dimensions={0}
+"""
+
+
+def test_walk_collectives_async_cp_and_tuple():
+    instrs = list(RL.walk_collectives(HLO_ASYNC_CP))
+    kinds = [i.kind for i in instrs]
+    # -done halves skipped: one cp, one (tuple) ag-start, one sync ag
+    assert kinds == ["collective-permute", "all-gather", "all-gather"]
+    cp, ag_t, ag_s = instrs
+    assert cp.is_async and cp.result_bytes == 32 * 128 * 2
+    assert cp.ring_bytes == pytest.approx(32 * 128 * 2)   # permute: as-is
+    assert ag_t.is_async and ag_t.group_size == 4
+    assert ag_t.result_bytes == (64 + 256) * 4            # tuple summed
+    assert ag_t.ring_bytes == pytest.approx((64 + 256) * 4 * 3 / 4)
+    assert not ag_s.is_async and ag_s.group_size == 2
+
+
+@pytest.mark.parametrize("hlo", [HLO_BASIC, HLO_IOTA, HLO_ASYNC,
+                                 HLO_TUPLE, HLO_UNKNOWN_DTYPE,
+                                 HLO_ASYNC_CP])
+def test_walker_totals_match_collective_bytes_bitwise(hlo):
+    """Satellite 3: the census built on walk_collectives must agree with
+    the roofline's collective_bytes bit-for-bit on every fixture."""
+    from repro.analysis.census import hlo_census
+    cb = RL.collective_bytes(hlo)
+    census = hlo_census(hlo)
+    per_kind_sum = 0.0
+    for kind in RL.COLLECTIVE_KINDS:
+        assert census["ring_bytes"][kind] == cb[kind], kind
+        per_kind_sum += census["ring_bytes"][kind]
+    assert census["ring_bytes"]["total"] == cb["total"]
+    assert census["unknown_dtypes"] == cb["unknown_dtypes"]
+    # counts are consistent with bytes: zero bytes iff zero instructions
+    for kind in RL.COLLECTIVE_KINDS:
+        assert (census["counts"][kind] == 0) == (cb[kind] == 0.0), kind
+
+
+def test_ring_model_bytes_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown collective kind"):
+        RL.ring_model_bytes("all-bogus", 1.0, 2)
