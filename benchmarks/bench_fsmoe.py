@@ -5,7 +5,11 @@ an analytic E/K compute blowup the measurement should reflect).
 
 Direct invocation (``python benchmarks/bench_fsmoe.py [--tiny] [--out ..]``)
 races the two dispatch modes — capacity vs dropless — forward+backward at a
-starved capacity_factor and writes ``BENCH_moe.json`` (``dispatch_points``).
+starved capacity_factor and writes ``BENCH_moe.json`` (``dispatch_points``),
+plus a Zipf-skewed-routing placement race — static identity vs the greedy
+LPT rebalanced placement over a simulated-EP bottleneck
+(``rebalance_points``; gated by ``check_regression.py::check_rebalance``:
+rebalanced throughput at least static, dropless stays drop-free).
 The structural gate (``check_regression.py``): dropless must report zero
 drops and conserve routed pairs at every point, while capacity demonstrably
 drops; step times are only loosely bounded (the dropless CPU lowering is an
@@ -127,6 +131,78 @@ def measure_dispatch(*, tiny: bool = False, iters: int = 5) -> dict:
             "dispatch_points": points}
 
 
+# ----------------------------------------------------------------------------
+# rebalance race: static vs greedy placement under Zipf-skewed routing
+#                 -> BENCH_moe.json ('rebalance_points')
+# ----------------------------------------------------------------------------
+
+def measure_rebalance(*, tiny: bool = False, iters: int = 5, ep: int = 4,
+                      zipf_a: float = 1.2) -> dict:
+    """Skewed-routing placement race (parallel/placement.py).
+
+    Tokens point along the router column of a Zipf-drawn expert, so the
+    *real* top-k routing is hot-headed: under the identity placement the
+    low-id ranks host every hot expert. The race times the simulated-EP
+    bottleneck — one host cannot run a real EP all-to-all, so the per-rank
+    step is modeled as (rank's routed tokens) x (measured per-token expert
+    FFN cost) and the step time is the max over ranks. Greedy LPT placement
+    from the same counts must recover throughput; dropless dispatch stays
+    drop-free under either placement (placements are pure data movement).
+    """
+    import numpy as np
+    from repro.parallel.placement import greedy_perm, imbalance, rank_loads
+
+    points = []
+    for name, E, K, d, f, T in (_TINY_SHAPES if tiny else _SHAPES):
+        cfg = ModelConfig(
+            name="b", arch_type="moe", num_layers=1, d_model=d, num_heads=2,
+            num_kv_heads=2, d_ff=0, vocab_size=64,
+            moe=MoEConfig(num_experts=E, experts_per_token=K, d_ff_expert=f,
+                          capacity_factor=2.0))
+        p = M.init_moe_block(jax.random.PRNGKey(0), cfg)
+
+        # Zipf-routed inputs: token t sits on expert id_t's router column
+        rng = np.random.default_rng(0)
+        w = 1.0 / np.arange(1, E + 1, dtype=np.float64) ** zipf_a
+        ids = rng.choice(E, size=T, p=w / w.sum())
+        router = np.asarray(p["router"], np.float32)          # (d, E)
+        x = jnp.asarray(router[:, ids].T * 4.0
+                        + rng.normal(0, 0.01, (T, d)), jnp.float32)
+
+        out, _, stats = jax.jit(
+            lambda p, x: M.moe_dropless(p, x, cfg.moe))(p, x)
+        counts = np.asarray(stats.counts, np.float64)
+        drops = int(stats.drops)
+        counts_sum = int(counts.sum())
+
+        # measured per-token expert-FFN cost on a calibration batch (big
+        # enough that launch overhead amortizes; same shape for both legs)
+        gw = jnp.zeros((d, f), jnp.float32)
+        dw = jnp.zeros((f, d), jnp.float32)
+        calib = jnp.ones((4096, d), jnp.float32)
+        ffn = jax.jit(lambda xx: (jax.nn.gelu(xx @ gw) @ dw).sum())
+        us_per_tok = _time(ffn, calib, iters=iters) / calib.shape[0]
+
+        row = {"shape": name.strip(), "experts": E, "top_k": K, "ep": ep,
+               "d_model": d, "d_ff_expert": f, "tokens": T,
+               "zipf_a": zipf_a, "drops": drops, "counts_sum": counts_sum,
+               "routed_pairs": T * K}
+        legs = {"static": tuple(range(E)),
+                "rebalanced": greedy_perm(counts, ep)}
+        for leg, perm_row in legs.items():
+            loads = rank_loads(counts, perm_row, ep)
+            t_ms = float(loads.max()) * us_per_tok / 1e3
+            row[leg] = {
+                "placement": list(perm_row),
+                "imbalance": imbalance(counts, perm_row, ep),
+                "max_rank_load": int(loads.max()),
+                "step_time_ms": t_ms,
+                "tok_s": (T * K) / (t_ms / 1e3) if t_ms > 0 else 0.0,
+            }
+        points.append(row)
+    return {"rebalance_points": points}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
@@ -135,6 +211,7 @@ def main(argv=None):
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_moe.json"))
     args = ap.parse_args(argv)
     result = measure_dispatch(tiny=args.tiny, iters=args.iters)
+    result.update(measure_rebalance(tiny=args.tiny, iters=args.iters))
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2)
     for row in result["dispatch_points"]:
@@ -143,6 +220,12 @@ def main(argv=None):
               f"drops={c['drops']:5d} | dropless={dl['step_time_ms']:7.2f}ms "
               f"drops={dl['drops']} "
               f"(counts {dl['counts_sum']}/{dl['routed_pairs']})")
+    for row in result["rebalance_points"]:
+        s, r = row["static"], row["rebalanced"]
+        print(f"{row['shape']:22s} static={s['tok_s']:10.0f}tok/s "
+              f"(imb {s['imbalance']:.2f}) | "
+              f"rebalanced={r['tok_s']:10.0f}tok/s "
+              f"(imb {r['imbalance']:.2f}) drops={row['drops']}")
     print(f"wrote {args.out}")
 
 

@@ -40,6 +40,10 @@ Checks (kind auto-detected from the JSON shape):
   dropless/capacity wallclock ratio is only loosely bounded
   (``--moe-ratio``): the CPU lowering of the ragged grouped matmul costs
   ~E dense matmuls, a lowering artifact rather than the accelerator story.
+  The same file's ``rebalance_points`` (the Zipf-skewed placement race)
+  are gated by ``check_rebalance``: rebalanced token throughput at
+  parity-or-better vs the static placement, no imbalance regression, and
+  zero drops / full pair conservation under either placement.
 
 Step-time tolerance is deliberately loose (hardware varies across CI
 runners); the structural properties are the tight part of the gate.
@@ -244,6 +248,49 @@ def check_moe(fresh: dict, base: dict, tol: float, moe_ratio: float) -> list:
     return errors
 
 
+def check_rebalance(fresh: dict, base: dict, tol: float) -> list:
+    """Gate the skewed-routing placement race (bench_fsmoe.py
+    ``rebalance_points``): the greedy rebalanced placement must hold
+    parity-or-better token throughput vs the static identity placement
+    (in-run comparison — both legs share one measured per-token cost, so
+    this is exact placement math, no runner noise), must not worsen the
+    rank imbalance, and dropless dispatch must stay drop-free with every
+    routed pair conserved under either placement. Throughput is also held
+    within ``--tol`` of the committed baseline per shape."""
+    errors = []
+    base_pts = {p["shape"]: p for p in base.get("rebalance_points", [])}
+    for p in fresh.get("rebalance_points", []):
+        shape = p["shape"]
+        s, r = p["static"], p["rebalanced"]
+        if p["drops"] != 0:
+            errors.append(f"rebalance {shape}: dropless reported "
+                          f"{p['drops']} drops under the skewed routing "
+                          f"(must be 0)")
+        if p["counts_sum"] != p["routed_pairs"]:
+            errors.append(f"rebalance {shape}: counts_sum {p['counts_sum']} "
+                          f"!= routed pairs {p['routed_pairs']} — the "
+                          f"placement lost tokens")
+        if r["tok_s"] < s["tok_s"]:
+            errors.append(
+                f"rebalance {shape}: rebalanced throughput "
+                f"{r['tok_s']:.0f} tok/s below static {s['tok_s']:.0f} "
+                f"tok/s — the greedy placement made the bottleneck worse")
+        if r["imbalance"] > s["imbalance"]:
+            errors.append(
+                f"rebalance {shape}: rebalanced imbalance "
+                f"{r['imbalance']:.3f} exceeds static {s['imbalance']:.3f}")
+        b = base_pts.get(shape)
+        if b is None:
+            continue
+        for leg in ("static", "rebalanced"):
+            ft, bt = p[leg]["tok_s"], b[leg]["tok_s"]
+            if bt > 0 and ft < bt / tol:
+                errors.append(
+                    f"rebalance {shape} {leg}: fresh {ft:.0f} tok/s < "
+                    f"baseline {bt:.0f} tok/s / {tol}")
+    return errors
+
+
 def check_census(fresh: dict, base: dict, census_tol: float) -> list:
     """Gate ANALYSIS_census.json (the Shardlint trace baseline).
 
@@ -296,8 +343,10 @@ def check_pair(fresh: dict, base: dict, args):
     if "kernel_points" in fresh:
         return "kernels", check_kernels(fresh, base, args.tol,
                                         args.kernel_parity)
-    if "dispatch_points" in fresh:
-        return "moe", check_moe(fresh, base, args.tol, args.moe_ratio)
+    if "dispatch_points" in fresh or "rebalance_points" in fresh:
+        errors = check_moe(fresh, base, args.tol, args.moe_ratio)
+        errors += check_rebalance(fresh, base, args.tol)
+        return "moe", errors
     if "executor_points" in fresh or "points" in fresh:
         return "pp", check_pp(fresh, base, args.tol, args.min_speedup)
     if "modes" in fresh:

@@ -48,6 +48,10 @@ MATRIX = (
     "dp=2,pp=2,ep=2,opt=epso,mb=4",
     "dp=2,ep=2,tp=2,opt=epso,overlap=ring",
     "dp=2,ep=2,tp=2,opt=epso,overlap=off",
+    # rebalance= plans are lowered under a deterministic non-identity
+    # expert placement (reversed rows) so the placed dispatch path and the
+    # placement-consistency contract are exercised structurally
+    "dp=2,ep=2,tp=2,opt=epso,overlap=ring,rebalance=50:1.25",
 )
 
 # jaxpr primitives worth keeping in the baseline: the contract inputs
@@ -144,6 +148,16 @@ def collect_plan_census(spec: str, *, arch: str = "mula-7b-a1b",
     pplan = ParallelPlan.parse(spec)
     cfg = pplan.apply_to_model(cfg)
     plan = pplan.resolve(cfg, global_batch=batch)
+    placement = None
+    if pplan.rebalance_params() is not None and cfg.moe is not None:
+        # lower under a deterministic non-identity placement: the step a
+        # rebalancing run actually executes mid-schedule (reversed expert
+        # order is the worst-case non-trivial permutation)
+        from repro.parallel.placement import ExpertPlacement
+        ne = cfg.moe.num_experts
+        placement = ExpertPlacement.broadcast(
+            tuple(reversed(range(ne))), cfg.num_layers)
+        plan = plan.with_placement(placement)
     step = make_train_step(cfg, None, tc, plan=plan)
 
     shape = InputShape("census", seq, batch, "train")
@@ -170,9 +184,19 @@ def collect_plan_census(spec: str, *, arch: str = "mula-7b-a1b",
         "full_param_bytes": full_param_bytes(cfg),
         "jaxpr_prims": interesting_prims(prims),
         "contracts": list(pplan.contracts()),
+        "moe_experts": cfg.moe.num_experts if cfg.moe is not None else None,
         "lower_s": round(t1 - t0, 1),
         "compile_s": round(t2 - t1, 1),
     }
+    if placement is not None:
+        entry["placement"] = {
+            "num_experts": placement.num_experts,
+            "num_layers": placement.num_layers,
+            "identity": placement.is_identity,
+            "is_permutation": all(
+                sorted(row) == list(range(placement.num_experts))
+                for row in placement.perm),
+        }
     entry.update(hlo_census(compiled.as_text()))
 
     entry["analytic_total"] = 0.0

@@ -35,6 +35,12 @@ coll-vs-costmodel            measured collective bytes within ``tol``x of
                              in either direction (a silent GSPMD behavior
                              change shows up here before it shows up as a
                              mystery slowdown)
+placement-consistency        a plan that declares ``rebalance=`` carries
+                             expert-placement metadata and the recorded
+                             permutation is a true bijection over the
+                             expert ids (parallel/placement.py) — a
+                             non-permutation would silently duplicate or
+                             drop experts at dispatch time
 ===========================  ==============================================
 """
 from __future__ import annotations
@@ -130,6 +136,28 @@ def _coll_vs_costmodel(entry: dict) -> List[str]:
                 f"(ratio {ratio:.2f}) diverge beyond {tol}x on plan "
                 f"{entry.get('spec', '?')!r}"]
     return []
+
+
+@_register("placement-consistency",
+           "rebalance= plans carry a bijective expert-placement record")
+def _placement_consistency(entry: dict) -> List[str]:
+    spec = entry.get("spec", "?")
+    pl = entry.get("placement")
+    if pl is None:
+        return [f"placement-consistency: plan {spec!r} declares rebalance= "
+                f"but the census entry carries no placement record — the "
+                f"lowered step's expert placement is unaccounted for"]
+    out = []
+    ne = pl.get("num_experts")
+    if not pl.get("is_permutation"):
+        out.append(f"placement-consistency: recorded placement on plan "
+                   f"{spec!r} is not a bijection over {ne} experts — "
+                   f"dispatch would duplicate/drop experts")
+    moe = entry.get("moe_experts")
+    if moe and ne and moe != ne:
+        out.append(f"placement-consistency: placement covers {ne} experts "
+                   f"but the model routes over {moe} (plan {spec!r})")
+    return out
 
 
 def is_host_transfer_line(line: str) -> bool:

@@ -16,9 +16,10 @@ SL002  ``ragged_dot`` outside the documented allowlist
 SL003  ``jax.device_get`` / ``np.asarray`` inside traced step-building
        modules (train/ models/ optim/ parallel/ core/) — a host sync
        baked into the step serializes every iteration
-SL004  writing the deprecated ``KERNEL_CONFIG`` / ``ATTN_IMPL`` aliases
-       outside their owners — plan-scoped ``KernelPlan`` replaced the
-       process-global knobs; new writers reintroduce cross-test leakage
+SL004  any occurrence of the retired ``KERNEL_CONFIG`` / ``ATTN_IMPL``
+       aliases — plan-scoped ``KernelPlan`` replaced the process-global
+       knobs, and the PR 4 compatibility shims are now deleted; reads,
+       writes, and imports alike are tombstoned (no allowlist)
 =====  ====================================================================
 
 Allowlists are path *suffixes* (posix-normalized), so the lint works on
@@ -38,9 +39,9 @@ ALLOWLIST = {
     "SL001": ("src/repro/compat.py",),
     "SL002": ("src/repro/kernels/ref.py",),
     "SL003": (),
-    "SL004": ("src/repro/kernels/ops.py", "src/repro/models/layers.py",
-              # the deprecation tests exercise the legacy writers on purpose
-              "tests/test_parallel_plan.py"),
+    # SL004 has no owners left: the PR 4 aliases are deleted, the symbols
+    # are tombstones — any mention (read, write, or import) is a violation
+    "SL004": (),
 }
 
 # SL003 applies only inside modules whose code ends up in the traced step
@@ -148,19 +149,24 @@ def lint_source(source: str, path: str, *,
                      f"{dotted}: numpy materialization inside a traced "
                      f"step-building module (use jnp.asarray)")
 
-        # SL004 — writes to the deprecated module-global kernel knobs
-        if isinstance(node, (ast.Assign, ast.AugAssign)):
-            targets = node.targets if isinstance(node, ast.Assign) \
-                else [node.target]
-            for t in targets:
-                base = t.value if isinstance(t, ast.Subscript) else t
-                name = _dotted(base) if isinstance(
-                    base, (ast.Attribute, ast.Name)) else ""
-                leaf = name.rsplit(".", 1)[-1] if name else ""
-                if leaf in _DEPRECATED_ALIASES:
-                    emit("SL004", node,
-                         f"write to deprecated {leaf}: scope kernel knobs "
-                         f"with KernelPlan / use_kernel_plan instead")
+        # SL004 — ANY occurrence of the retired module-global kernel knobs:
+        # bare names, attribute access (ops.KERNEL_CONFIG), and imports.
+        # The aliases are deleted; a surviving mention is dead code that
+        # would NameError (or worse, resurrect the global) at runtime.
+        if isinstance(node, ast.Name) and node.id in _DEPRECATED_ALIASES:
+            emit("SL004", node,
+                 f"{node.id} is retired: scope kernel knobs with "
+                 f"KernelPlan / use_kernel_plan instead")
+        elif isinstance(node, ast.Attribute) and \
+                node.attr in _DEPRECATED_ALIASES:
+            emit("SL004", node,
+                 f"{_dotted(node) or node.attr} is retired: scope kernel "
+                 f"knobs with KernelPlan / use_kernel_plan instead")
+        elif isinstance(node, ast.ImportFrom) and any(
+                a.name in _DEPRECATED_ALIASES for a in node.names):
+            emit("SL004", node,
+                 "importing a retired alias (KERNEL_CONFIG/ATTN_IMPL): "
+                 "scope kernel knobs with KernelPlan / use_kernel_plan")
     return out
 
 

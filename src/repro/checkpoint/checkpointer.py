@@ -106,11 +106,20 @@ class Checkpointer:
     reshard a checkpoint written under a different axis layout — it raises
     a descriptive error unless the caller opts in with
     ``on_plan_mismatch='reshard'`` (an explicit re-plan: the host arrays are
-    device_put onto the live plan's shardings)."""
+    device_put onto the live plan's shardings).
+
+    Live expert placement (parallel/placement.py): under EP rebalancing the
+    expert stacks are saved in their *placed* order, and the live
+    ``placement`` (kept current by the launcher) rides in the MANIFEST —
+    ``restore`` surfaces it as ``restored_placement`` so the caller rebuilds
+    the step against the exact placement the arrays were written under
+    (resume bit-identical mid-rebalance-schedule). Placement does not change
+    shardings, so ``layout_signature`` plan checks are orthogonal."""
 
     def __init__(self, root: str, *, interval: int = 1000,
                  model_only_interval: int = 0, shardings=None,
-                 plan=None, on_plan_mismatch: str = "error"):
+                 plan=None, on_plan_mismatch: str = "error",
+                 placement=None):
         if on_plan_mismatch not in ("error", "reshard"):
             raise ValueError("on_plan_mismatch must be 'error' or 'reshard',"
                              f" got {on_plan_mismatch!r}")
@@ -120,6 +129,8 @@ class Checkpointer:
         self.shardings = shardings       # state-shaped pytree or None
         self.plan = plan                 # ResolvedPlan or None
         self.on_plan_mismatch = on_plan_mismatch
+        self.placement = placement       # live ExpertPlacement or None
+        self.restored_placement = None   # set by restore()
         os.makedirs(root, exist_ok=True)
         self.slots = [os.path.join(root, "ckpt-1"),
                       os.path.join(root, "ckpt-2")]
@@ -168,6 +179,8 @@ class Checkpointer:
         if self.plan is not None:
             man["plan"] = {"spec": self.plan.spec(),
                            "layout": self.plan.layout_signature()}
+        if self.placement is not None:
+            man["placement"] = self.placement.to_manifest()
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(man, f)
         if os.path.exists(slot):
@@ -184,6 +197,7 @@ class Checkpointer:
         axis layouts must agree — a mismatch raises instead of silently
         resharding onto whatever the caller passed (set
         ``on_plan_mismatch='reshard'`` to re-plan explicitly)."""
+        self.restored_placement = None
         best, best_step = None, -1
         for slot in self.slots:
             s = self._slot_step(slot)
@@ -191,7 +205,14 @@ class Checkpointer:
                 best, best_step = slot, s
         if best is None:
             return None, -1
-        self._check_plan(self._slot_manifest(best), best)
+        manifest = self._slot_manifest(best)
+        self._check_plan(manifest, best)
+        if (manifest or {}).get("placement") is not None:
+            from repro.parallel.placement import ExpertPlacement
+            self.restored_placement = ExpertPlacement.from_manifest(
+                manifest["placement"])
+        else:
+            self.restored_placement = None
         state = load_pytree(template, os.path.join(best, "state.npz"))
         sh = shardings if shardings is not None else self.shardings
         if sh is not None:

@@ -40,6 +40,16 @@ static.
 
 Every path reports ``MoeStats`` (per-expert activation counts + drop
 count) so the train step can surface routing telemetry.
+
+Expert placement (``parallel/placement.py``): every path takes an
+optional ``placement`` — the (E,) *inverse* permutation row mapping
+global expert id -> placed position. The stacked expert weights are
+stored in placed order (position p holds global expert perm[p]), the
+router keeps producing global ids, and dispatch translates
+``indices -> placement[indices]`` so each token reaches the position
+hosting its expert; reported ``MoeStats.counts`` are translated back
+(``counts_pos[placement]``) so telemetry stays in global expert order.
+Router weights and shared experts are never permuted.
 """
 from __future__ import annotations
 
@@ -109,7 +119,7 @@ def _shared_expert(p, x):
 # naive baseline (HF-style: all experts compute all tokens)
 # ----------------------------------------------------------------------------
 
-def moe_naive(p, x, moe_cfg) -> tuple[jax.Array, RouterOut]:
+def moe_naive(p, x, moe_cfg, placement=None) -> tuple[jax.Array, RouterOut]:
     r = route(x, p["router"], num_experts=moe_cfg.num_experts,
               top_k=moe_cfg.experts_per_token,
               forced_uniform=moe_cfg.forced_uniform_routing)
@@ -120,7 +130,9 @@ def moe_naive(p, x, moe_cfg) -> tuple[jax.Array, RouterOut]:
 
     ys = jax.vmap(one)(p["gate"].astype(x.dtype), p["up"].astype(x.dtype),
                        p["down"].astype(x.dtype))           # (E, T, d)
-    one_hot = jax.nn.one_hot(r.indices, moe_cfg.num_experts, dtype=x.dtype)
+    # combine indexes stored (placed) positions; r keeps global ids
+    idx = r.indices if placement is None else placement[r.indices]
+    one_hot = jax.nn.one_hot(idx, moe_cfg.num_experts, dtype=x.dtype)
     cw = (one_hot * r.weights[..., None].astype(x.dtype)).sum(1)  # (T, E)
     out = jnp.einsum("te,etd->td", cw, ys)
     if moe_cfg.num_shared_experts:
@@ -363,19 +375,22 @@ def dispatch_compute_combine(gate_w, up_w, down_w, x, r: RouterOut, moe_cfg,
 # ----------------------------------------------------------------------------
 
 def _moe_dense(p, x, moe_cfg, *, backend: str, constrain=None,
-               c_align: int = 1, dropless: bool = False):
+               c_align: int = 1, dropless: bool = False, placement=None):
     """Shared core of the auto-sharded (no shard_map) paths. Returns
     (out, router_out, MoeStats)."""
     r = route(x, p["router"], num_experts=moe_cfg.num_experts,
               top_k=moe_cfg.experts_per_token,
               forced_uniform=moe_cfg.forced_uniform_routing)
-    out, plan = dispatch_compute_combine(p["gate"], p["up"], p["down"], x, r,
+    rd = r if placement is None else \
+        RouterOut(r.weights, placement[r.indices], r.aux_loss, r.z_loss)
+    out, plan = dispatch_compute_combine(p["gate"], p["up"], p["down"], x, rd,
                                          moe_cfg, backend=backend,
                                          constrain=constrain, c_align=c_align,
                                          dropless=dropless)
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
-    stats = MoeStats(plan.counts.astype(jnp.float32),
+    counts = plan.counts if placement is None else plan.counts[placement]
+    stats = MoeStats(counts.astype(jnp.float32),
                      plan.drops.astype(jnp.float32))
     return out, r, stats
 
@@ -387,12 +402,13 @@ def moe_dense_capacity(p, x, moe_cfg, backend: str = "xla", constrain=None,
     return out, r
 
 
-def moe_dropless(p, x, moe_cfg, backend: str = "xla", constrain=None):
+def moe_dropless(p, x, moe_cfg, backend: str = "xla", constrain=None,
+                 placement=None):
     """Dropless dispatch (tentpole): true per-expert counts feed the grouped
     matmul's ragged ``group_sizes`` and the worst-case pool guarantees
     stats.drops == 0 for any routing. Returns (out, router_out, MoeStats)."""
     return _moe_dense(p, x, moe_cfg, backend=backend, constrain=constrain,
-                      dropless=True)
+                      dropless=True, placement=placement)
 
 
 # ----------------------------------------------------------------------------
@@ -429,7 +445,8 @@ def _fsmoe_stats(plan_counts, drops, *, ep_axis, batch_axes, manual,
 
 
 def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
-                 batch_axes=("data",), tp_axis=None, dropless: bool = False):
+                 batch_axes=("data",), tp_axis=None, dropless: bool = False,
+                 placement=None):
     """Paper Algorithm 1 under EP. Tokens x: (N, d) sharded over
     (batch_axes..., ep_axis) on dim 0; expert weights sharded over ep_axis on
     the stacked expert dim. The body is fully manual so the dispatch sort
@@ -469,7 +486,7 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
     batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
     token_spec = P(tuple(batch_axes) + (ep_axis,), None)
 
-    def body(router_w, gate, up, down, xl):
+    def body(router_w, gate, up, down, xl, pl=None):
         if moe_cfg.stage1 == "a2a":
             if tp_axis is not None:
                 raise NotImplementedError(
@@ -477,15 +494,18 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
                     "the allgather Stage 1 for ep x tp plans")
             return _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg,
                                    ep_axis=ep_axis, ep=ep, manual=manual,
-                                   batch_axes=batch_axes)
+                                   batch_axes=batch_axes, placement=pl)
         # Router on local tokens (router replicated — paper §3.1).
         r = route(xl, router_w, num_experts=E,
                   top_k=moe_cfg.experts_per_token,
                   forced_uniform=moe_cfg.forced_uniform_routing)
+        # placed-order dispatch: global ids -> stored positions (aux/z losses
+        # already computed on global ids inside route)
+        idx = r.indices if pl is None else pl[r.indices]
         # ---- Stage 1: allgather tokens + routing over the EP axis -------
         x_g = jax.lax.all_gather(xl, ep_axis, tiled=True)
         w_g = jax.lax.all_gather(r.weights, ep_axis, tiled=True)
-        i_g = jax.lax.all_gather(r.indices, ep_axis, tiled=True)
+        i_g = jax.lax.all_gather(idx, ep_axis, tiled=True)
         r_g = RouterOut(w_g, i_g, r.aux_loss, r.z_loss)
         # ---- Stages 2-5 on the local expert (and d_ff) slice -------------
         rank = jax.lax.axis_index(ep_axis)
@@ -507,15 +527,21 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
             z = jax.lax.pmean(z, ax)
         stats = _fsmoe_stats(plan.counts, plan.drops, ep_axis=ep_axis,
                              batch_axes=batch_axes, manual=manual)
+        if pl is not None:     # report counts back in global expert order
+            stats = MoeStats(stats.counts[pl], stats.drops)
         return out_local, aux, z, stats
 
+    operands = [p["router"], p["gate"], p["up"], p["down"], x]
+    in_specs = [P(), P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
+                P(ep_axis, tp_axis, None), token_spec]
+    if placement is not None:
+        operands.append(jnp.asarray(placement, jnp.int32))
+        in_specs.append(P(None))
     out, aux, z, stats = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
-                  P(ep_axis, tp_axis, None), token_spec),
+        in_specs=tuple(in_specs),
         out_specs=(token_spec, P(), P(), MoeStats(P(None), P())),
-        axis_names=manual)(
-            p["router"], p["gate"], p["up"], p["down"], x)
+        axis_names=manual)(*operands)
     out = checkpoint_name(out, "moe_out")
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
@@ -527,7 +553,7 @@ def moe_fsmoe_ep(p, x, moe_cfg, *, mesh, ep_axis: str = "model",
 # ----------------------------------------------------------------------------
 
 def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
-                    manual, batch_axes=()):
+                    manual, batch_axes=(), placement=None):
     """Capacity-bounded all-to-all dispatch (EXPERIMENTS §Perf, dbrx
     hillclimb). The paper sends *all* tokens to *all* EP ranks (allgather,
     chosen because oneCCL's allgather beats its irregular all-to-all). On
@@ -547,9 +573,11 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
 
     r = route(xl, router_w, num_experts=E, top_k=K,
               forced_uniform=moe_cfg.forced_uniform_routing)
+    # placed-order dispatch: translate global ids to stored positions
+    idx = r.indices if placement is None else placement[r.indices]
 
     # --- build per-destination send buffers (dest rank = expert // EL) ----
-    dest = (r.indices // EL).astype(jnp.int32)               # (T,K)
+    dest = (idx // EL).astype(jnp.int32)                     # (T,K)
     Cd = round_up(int(math.ceil(moe_cfg.capacity_factor * T_loc * K / ep)), 8)
     plan = make_dispatch_plan(dest, num_experts=ep, pool_rows=ep * Cd,
                               uniform_capacity=True)
@@ -559,7 +587,7 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
     pool_valid = jnp.zeros((ep * Cd,), bool).at[plan.slot].set(
         plan.valid, mode="drop")
     send_x = xl[inv_tok] * pool_valid[:, None].astype(xl.dtype)
-    flat_idx = r.indices.reshape(-1)
+    flat_idx = idx.reshape(-1)
     flat_w = r.weights.reshape(-1)
     send_e = jnp.full((ep * Cd,), -1, jnp.int32).at[plan.slot].set(
         flat_idx, mode="drop")
@@ -607,6 +635,8 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
     stats = _fsmoe_stats(inner_plan.counts, plan.drops, ep_axis=ep_axis,
                          batch_axes=batch_axes, manual=manual,
                          extra_drops=inner_plan.drops)
+    if placement is not None:  # back to global expert order
+        stats = MoeStats(stats.counts[placement], stats.drops)
     return out_local, aux, z, stats
 
 
@@ -615,7 +645,8 @@ def _fsmoe_a2a_body(gate, up, down, router_w, xl, moe_cfg, *, ep_axis, ep,
 # ----------------------------------------------------------------------------
 
 def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
-                      batch_axes=("data",), dropless: bool = False):
+                      batch_axes=("data",), dropless: bool = False,
+                      placement=None):
     """Beyond-paper optimization (EXPERIMENTS §Perf, mixtral hillclimb).
 
     When E < the model-axis size (mixtral: 8 experts on a 16-way axis), the
@@ -634,12 +665,14 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
     batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
     token_spec = P(tuple(batch_axes), None) if batch_axes else P(None, None)
 
-    def body(router_w, gate, up, down, xl):
+    def body(router_w, gate, up, down, xl, pl=None):
         r = route(xl, router_w, num_experts=moe_cfg.num_experts,
                   top_k=moe_cfg.experts_per_token,
                   forced_uniform=moe_cfg.forced_uniform_routing)
+        rd = r if pl is None else \
+            RouterOut(r.weights, pl[r.indices], r.aux_loss, r.z_loss)
         out_partial, plan = dispatch_compute_combine(
-            gate, up, down, xl, r, moe_cfg, backend="xla",
+            gate, up, down, xl, rd, moe_cfg, backend="xla",
             dropless=dropless)
         out = jax.lax.psum(out_partial, tp_axis)
         aux, z = r.aux_loss, r.z_loss
@@ -649,7 +682,8 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
         # all E experts are local here (EP=1): counts/drops are per token
         # shard — psum over token-partitioning axes, pmean over replicating
         # ones (every tp rank ran the identical dispatch)
-        counts = plan.counts.astype(jnp.float32)
+        counts = plan.counts if pl is None else plan.counts[pl]
+        counts = counts.astype(jnp.float32)
         drops = plan.drops.astype(jnp.float32)
         for ax in manual:
             if ax in batch_axes:
@@ -660,13 +694,17 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
                 drops = jax.lax.pmean(drops, ax)
         return out, aux, z, MoeStats(counts, drops)
 
+    operands = [p["router"], p["gate"], p["up"], p["down"], x]
+    in_specs = [P(), P(None, None, tp_axis), P(None, None, tp_axis),
+                P(None, tp_axis, None), token_spec]
+    if placement is not None:
+        operands.append(jnp.asarray(placement, jnp.int32))
+        in_specs.append(P(None))
     out, aux, z, stats = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(None, None, tp_axis), P(None, None, tp_axis),
-                  P(None, tp_axis, None), token_spec),
+        in_specs=tuple(in_specs),
         out_specs=(token_spec, P(), P(), MoeStats(P(None), P())),
-        axis_names=manual)(
-            p["router"], p["gate"], p["up"], p["down"], x)
+        axis_names=manual)(*operands)
     out = checkpoint_name(out, "moe_out")
     if moe_cfg.num_shared_experts:
         out = out + _shared_expert(p, x)
@@ -679,16 +717,19 @@ def moe_etp_shard_map(p, x, moe_cfg, *, mesh, tp_axis: str = "model",
 
 def sparse_moe_block(p, x, cfg, *, mesh=None, ep_axis: str = "model",
                      batch_axes=("data",), constrain=None, c_align: int = 1,
-                     tp_mesh=None, tp_axis=None):
+                     tp_mesh=None, tp_axis=None, placement=None):
     """x: (B, S, d) -> (out (B,S,d), aux_loss, z_loss, MoeStats). The
     dispatch mode comes from ``cfg.moe.dispatch``; ``tp_axis`` (a plan
-    mesh's dedicated TP axis) composes expert-TP with the EP shard_map."""
+    mesh's dedicated TP axis) composes expert-TP with the EP shard_map.
+    ``placement``: optional (E,) inverse placement row (global expert id
+    -> stored position) when the stacked expert weights are re-placed."""
     B, S, d = x.shape
     m = cfg.moe
     dropless = m.dispatch == "dropless"
     xt = x.reshape(B * S, d)
     if m.moe_impl == "naive":
-        out, r = moe_naive(p, xt, m)
+        out, r = moe_naive(p, xt, m, placement=placement)
+        # stats from the router's global ids — already placement-free
         one_hot = jax.nn.one_hot(r.indices, m.num_experts, dtype=jnp.float32)
         stats = MoeStats(one_hot.sum((0, 1)), jnp.zeros((), jnp.float32))
         return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
@@ -698,15 +739,17 @@ def sparse_moe_block(p, x, cfg, *, mesh=None, ep_axis: str = "model",
     if use_ep:
         out, r, stats = moe_fsmoe_ep(p, xt, m, mesh=mesh, ep_axis=ep_axis,
                                      batch_axes=batch_axes, tp_axis=tp_axis,
-                                     dropless=dropless)
+                                     dropless=dropless, placement=placement)
         return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
     if m.etp_shard_map and tp_mesh is not None:
         out, r, stats = moe_etp_shard_map(p, xt, m, mesh=tp_mesh,
                                           tp_axis=tp_axis or "model",
                                           batch_axes=batch_axes,
-                                          dropless=dropless)
+                                          dropless=dropless,
+                                          placement=placement)
         return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats
     backend = stage45_backend(m) if m.moe_impl == "fsmoe" else "xla"
     out, r, stats = _moe_dense(p, xt, m, backend=backend, constrain=constrain,
-                               c_align=c_align, dropless=dropless)
+                               c_align=c_align, dropless=dropless,
+                               placement=placement)
     return out.reshape(B, S, d), r.aux_loss, r.z_loss, stats

@@ -13,15 +13,17 @@ kernels) come from the *active* ``parallel.plan.KernelPlan`` — plan-scoped
 via ``use_kernel_plan`` (leak-free), read at trace time. Under
 ``KernelPlan(tiles='auto')`` each wrapper first consults the measured
 tuning table (kernels/autotune.py) for its shape bucket and falls back to
-the plan's explicit tiles on a miss. ``KERNEL_CONFIG``
-remains as a thin deprecated dict-view of the process-default plan.
+the plan's explicit tiles on a miss.
 Wrappers pad K/N dims up to tile multiples (zero-padding is exact for
 matmul) and slice back.
+
+Tombstone: the PR 4 dict-view compatibility alias over the process-default
+plan is deleted (lint rule SL004 forbids the symbol repo-wide). Scope a
+plan with ``use_kernel_plan`` / set the process default with
+``set_default_kernel_plan`` instead.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections.abc import MutableMapping
 from functools import partial
 
 import jax
@@ -37,52 +39,9 @@ from .swiglu import swiglu_pallas
 from .moe_dispatch import token_counts_pallas
 
 __all__ = ["KernelPlan", "current_kernel_plan", "default_kernel_plan",
-           "set_default_kernel_plan", "use_kernel_plan", "KERNEL_CONFIG",
+           "set_default_kernel_plan", "use_kernel_plan",
            "gmm", "combine", "fused_swiglu", "token_counts",
            "flash_attention", "gmm_align", "ssd_intra_chunk"]
-
-
-class _KernelConfigAlias(MutableMapping):
-    """DEPRECATED view of the process-default :class:`KernelPlan`.
-
-    Kept so legacy call sites (``ops.KERNEL_CONFIG['tile_m'] = 8`` and the
-    save/restore idiom ``old = dict(KERNEL_CONFIG); ...; update(old)``)
-    still work. Both reads and writes go to the process *default* plan —
-    never the scoped-active one — so the idiom stays round-trip-safe even
-    when executed inside a ``use_kernel_plan`` scope. New code should scope
-    a plan instead::
-
-        with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
-                                                 tile_m=8)):
-            ...
-    """
-    _KEYS = ("tile_m", "tile_k", "tile_n", "interpret")
-
-    def __getitem__(self, k):
-        if k not in self._KEYS:
-            raise KeyError(k)
-        return getattr(default_kernel_plan(), k)
-
-    def __setitem__(self, k, v):
-        if k not in self._KEYS:
-            raise KeyError(k)
-        set_default_kernel_plan(
-            dataclasses.replace(default_kernel_plan(), **{k: v}))
-
-    def __delitem__(self, k):
-        raise TypeError("KERNEL_CONFIG keys are fixed")
-
-    def __iter__(self):
-        return iter(self._KEYS)
-
-    def __len__(self):
-        return len(self._KEYS)
-
-    def __repr__(self):
-        return f"KERNEL_CONFIG(deprecated -> {default_kernel_plan()!r})"
-
-
-KERNEL_CONFIG = _KernelConfigAlias()
 
 
 def _interpret() -> bool:

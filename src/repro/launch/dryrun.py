@@ -36,6 +36,7 @@ from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
 from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as RL
 from repro.launch.specs import input_specs, decode_input_specs, state_specs
+from repro.parallel.plan import ParallelPlan, ResolvedPlan
 from repro.parallel.sharding import make_rules
 from repro.train.trainer import (make_train_step, make_prefill_step,
                                  make_serve_step)
@@ -94,6 +95,13 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     rules = make_rules(cfg, mesh, kind=shape.kind, fsdp=fsdp, role=role,
                        global_batch=shape.global_batch)
+    # the production meshes carry roles/axis names no plan token spells, so
+    # wrap the hand-built rules in a ResolvedPlan rather than riding the
+    # deprecated rules=/mesh= threading into the step builders
+    rplan = ResolvedPlan(
+        plan=ParallelPlan(opt_shard=opt_mode if shape.kind == "train"
+                          else "none", fsdp=fsdp, microbatches=max(nmb, 1)),
+        mesh=mesh, rules=rules)
     # microbatches must keep the per-microbatch batch shardable
     shards = 1
     for a in rules.batch_axes:
@@ -107,23 +115,25 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         par = ParallelConfig(remat_policy=sac if sac is not None else "block",
                              microbatches=nmb,
                              optimizer_sharding=opt_mode)
-        step = make_train_step(cfg, par, train, rules=rules, mesh=mesh)
+        step = make_train_step(cfg, par, train, plan=rplan)
         state = state_specs(cfg, train, rules, opt_mode)
         batch = input_specs(cfg, shape, rules)
         args = (state, batch)
     elif shape.kind == "prefill":
-        step = make_prefill_step(cfg, rules=rules, mesh=mesh)
+        step = make_prefill_step(cfg, plan=rplan)
         params = state_specs(cfg, train, rules, opt_mode).params
         batch = input_specs(cfg, shape, rules)
         args = (params, batch)
     else:  # decode
-        step = make_serve_step(cfg, rules=rules)
+        step = make_serve_step(cfg, plan=rplan)
         params = state_specs(cfg, train, rules, opt_mode).params
         tokens, cache, index = decode_input_specs(cfg, shape, rules)
         args = (params, tokens, cache, index)
 
     t0 = time.time()
-    lowered = jax.jit(step).lower(*args)
+    # the train step comes back already jitted (the plan carries an opt
+    # mode); prefill/serve come back raw
+    lowered = (step if hasattr(step, "lower") else jax.jit(step)).lower(*args)
     t1 = time.time()
     compiled = lowered.compile()
     t2 = time.time()

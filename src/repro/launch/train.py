@@ -107,6 +107,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         pp_schedule: str = None,
         pp_impl: str = None, moe_dispatch: str = None,
         kernel_tiles: str = None,
+        rebalance: str = None, rebalance_force_at: int = None,
         n_buffer: int = 2,
         inject_hard_at: int = None, inject_soft_at: int = None,
         max_relaunches: int = 8) -> RunResult:
@@ -179,6 +180,11 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
             pplan = ParallelPlan()
         pplan = dataclasses.replace(
             pplan, kernel=_apply_tiles_token(pplan.kernel, kernel_tiles))
+    if rebalance is not None:           # CLI flag overrides the spec token
+        if pplan is None:
+            raise ValueError("--rebalance needs --parallel (or --mesh): "
+                             "rebalancing re-places experts over the EP axis")
+        pplan = dataclasses.replace(pplan, rebalance=rebalance)
     opt_shard = pplan.opt_shard if pplan is not None else (opt_shard
                                                            or "none")
 
@@ -238,17 +244,61 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     state = init_state(jax.random.PRNGKey(seed), cfg, train, plan=plan,
                        opt_sharding_mode=opt_shard)
     state_sh = train_state_shardings(state.params, rules, opt_shard)
-    if plan is not None and plan.mesh is not None:
-        step_fn = make_train_step(cfg, par, train, plan=plan,
-                                  state_shardings=state_sh)
-    elif plan is not None:
-        # meshless plan (all axes 1): no shardings to install, but the plan
-        # still carries the KernelPlan (backend/tiles) that must scope the
-        # step trace — dropping it here would silently ignore --kernel-tiles
-        step_fn = jax.jit(make_train_step(cfg, par, train, plan=plan))
-    else:
-        step_fn = jax.jit(make_train_step(cfg, par, train))
+
+    def build_step(plan_live):
+        if plan_live is not None and plan_live.mesh is not None:
+            return make_train_step(cfg, par, train, plan=plan_live,
+                                   state_shardings=state_sh)
+        if plan_live is not None:
+            # meshless plan (all axes 1): no shardings to install, but the
+            # plan still carries the KernelPlan (backend/tiles) that must
+            # scope the step trace — dropping it here would silently ignore
+            # --kernel-tiles
+            return jax.jit(make_train_step(cfg, par, train, plan=plan_live))
+        return jax.jit(make_train_step(cfg, par, train))
+
+    # live state for the rebalance loop: the resolved plan (placement rides
+    # on it) and the step compiled against it — a rebalance swaps both
+    live = {"plan": plan, "step_fn": build_step(plan)}
     bsh = batch_sharding(rules)
+
+    # ---- telemetry-driven EP rebalancing (parallel/placement.py) ---------
+    reb = pplan.rebalance_params() if pplan is not None else None
+    controller = None
+    if (reb is not None or rebalance_force_at is not None) \
+            and cfg.moe is not None:
+        from repro.parallel.placement import RebalanceController
+        interval, threshold = reb if reb is not None else (steps + 1, 1.0)
+        ep_ax = rules.ep_axis if rules is not None else None
+        ep = rules.mesh.shape[ep_ax] if (rules is not None and ep_ax
+                                         and rules.mesh is not None) else 1
+        controller = RebalanceController(
+            num_layers=cfg.num_layers, num_experts=cfg.moe.num_experts,
+            ep=ep, interval=interval, threshold=threshold)
+
+    def set_placement(placement, state=None, *, prev=None):
+        """Swap the live placement: optionally move the state arrays
+        (prev -> placement), rebuild the jitted step against it, and keep
+        the checkpointer manifest current."""
+        if prev is not None and state is not None:
+            from repro.parallel.placement import apply_placement
+            mv = lambda s: apply_placement(s, prev, placement,
+                                           cfg.num_layers,
+                                           cfg.moe.num_experts)
+            if state_sh is not None:
+                mv = jax.jit(mv, donate_argnums=0, out_shardings=state_sh)
+            else:
+                mv = jax.jit(mv, donate_argnums=0)
+            state = mv(state)
+        live["plan"] = live["plan"].with_placement(
+            None if placement is None or placement.is_identity
+            else placement)
+        live["step_fn"] = build_step(live["plan"])
+        ckpt.placement = None if placement is None or placement.is_identity \
+            else placement
+        if controller is not None and placement is not None:
+            controller.placement = placement
+        return state
 
     inject_hard_at = inject_hard_at if inject_hard_at is not None \
         else _env_int("REPRO_INJECT_HARD_AT")
@@ -272,6 +322,11 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
     if restored is not None:
         state, start = restored, ck_step + 1   # ckpt holds post-step state
         print(f"resumed from step {start}")
+        if ckpt.restored_placement is not None:
+            # arrays on disk are already in placed order — adopt the manifest
+            # placement without moving anything, rebuild the step against it
+            set_placement(ckpt.restored_placement)
+            print(f"resumed expert placement (non-identity) from manifest")
     # the loop consumes the loader's iterator; point it at the first step to
     # run so a resumed run replays the exact batch sequence an uninterrupted
     # one would have seen (never batch 0 again)
@@ -307,7 +362,7 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         batch_dev = jax.tree.map(
             lambda a: jax.device_put(a, bsh) if bsh is not None
             else jnp.asarray(a), batch_np)
-        state, metrics = step_fn(state, batch_dev)
+        state, metrics = live["step_fn"](state, batch_dev)
         # one host sync per step: batch every fetched metric into a single
         # device_get — per-metric float()/np.asarray() calls would each
         # block and serialize the overlapped step. The MoE telemetry (a
@@ -320,6 +375,8 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         if "moe_drops" in metrics:
             fetch["moe_drops"] = metrics["moe_drops"]
             fetch["moe_load"] = metrics["moe_load"]
+            if controller is not None:
+                fetch["moe_counts"] = metrics["moe_counts"]
         vals = jax.device_get(fetch)
         loss = float(vals["loss"])
         gnorm = float(vals["grad_norm"])
@@ -339,6 +396,26 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                 else 0.0
             moe_line = (f" drops {drops:.0f} "
                         f"load_max {history[step]['moe_load_max']:.3f}")
+        if controller is not None and "moe_counts" in vals:
+            # telemetry-driven EP rebalancing: feed the windowed counts to
+            # the controller; at a window boundary (or the forced step) move
+            # the expert stacks + EPSO states and rebuild the step. The
+            # mutated state returns from this step, so the checkpointer
+            # saves placed arrays together with the manifest placement.
+            imb = controller.observe(np.asarray(vals["moe_counts"]))
+            history[step]["moe_imbalance"] = imb
+            moe_line += f" imb {imb:.2f}"
+            do_force = (rebalance_force_at is not None
+                        and step == rebalance_force_at)
+            if controller.window_full() or do_force:
+                prev = controller.placement
+                new_pl = controller.propose(force=do_force)
+                if new_pl is not None:
+                    state = set_placement(new_pl, state, prev=prev)
+                    history[step]["rebalanced"] = True
+                    print(f"step {step:5d} rebalanced expert placement "
+                          f"(imbalance {imb:.2f}, ep={controller.ep}, "
+                          f"event #{controller.rebalances})")
         if will_log:
             dt = time.time() - t0
             print(f"step {step:5d} loss {loss:.4f} gnorm {gnorm:.3f} "
@@ -350,6 +427,16 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
         # rewind the batch stream to the restore point: the iterator re-reads
         # the shared step cursor on every next(), so this re-points it
         loader.load_state_dict({"step": step})
+        if controller is not None:
+            # re-sync the live placement to whatever the restored checkpoint
+            # was written under (identity when the manifest carries none) —
+            # the relaunch may roll back across a rebalance event
+            from repro.parallel.placement import ExpertPlacement
+            target = ckpt.restored_placement or ExpertPlacement.identity(
+                cfg.num_layers, cfg.moe.num_experts)
+            if target != controller.placement:
+                set_placement(target)
+            controller.reset_window()
         return state
 
     state, end_step, relaunches = run_with_failure_handling(
@@ -372,6 +459,13 @@ def run(arch: str, *, scale: str = "smoke", steps: int = 100, batch: int = 8,
                "pp_impl": pp_impl if pp_stages > 1 else None,
                "relaunches": relaunches,
                "replaced": result.replaced,
+               "rebalance": pplan.rebalance if pplan is not None else None,
+               "rebalances": controller.rebalances if controller is not None
+               else 0,
+               "final_imbalance": next(
+                   (history[s].get("moe_imbalance")
+                    for s in sorted(history, reverse=True)
+                    if "moe_imbalance" in history[s]), None),
                "final_loss": result[-1]["loss"] if result else None}
     with open(os.path.join(out, "summary.json"), "w") as f:
         json.dump(summary, f)
@@ -456,6 +550,18 @@ def main():
                          "or an explicit 'TMxTKxTN' triple, e.g. "
                          "128x512x512. Overrides a --parallel spec's "
                          "tiles= option")
+    ap.add_argument("--rebalance", default=None,
+                    help="telemetry-driven EP rebalancing "
+                         "(parallel/placement.py): 'off' or 'N:threshold' "
+                         "(e.g. 50:1.25 — every 50 steps, re-place the "
+                         "experts over the EP axis when the windowed "
+                         "max/mean rank load exceeds 1.25). Numerics-"
+                         "preserving data movement: losses are unchanged "
+                         "across a rebalance event. Overrides a --parallel "
+                         "spec's rebalance= option")
+    ap.add_argument("--rebalance-force-at", type=int, default=None,
+                    help="force one rebalance event after this step "
+                         "regardless of threshold (tests/goldens)")
     ap.add_argument("--log-every", type=int, default=10,
                     help="print the step line (loss/gnorm/lr + MoE routing "
                          "telemetry: drops, max expert load) every N steps")
@@ -478,6 +584,8 @@ def main():
         pp_schedule=args.pp_schedule,
         pp_impl=args.pp_impl, moe_dispatch=args.moe_dispatch,
         kernel_tiles=args.kernel_tiles,
+        rebalance=args.rebalance,
+        rebalance_force_at=args.rebalance_force_at,
         log_every=args.log_every, n_buffer=args.n_buffer,
         inject_hard_at=args.inject_hard_at,
         inject_soft_at=args.inject_soft_at)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.kernels.ref import slot_decode_attention_ref
-from repro.parallel.plan import current_kernel_plan, scoped_kernel_plan
+from repro.parallel.plan import current_kernel_plan
 
 Constrain = Callable[[jax.Array, str], jax.Array]  # (x, logical_spec_name)
 
@@ -30,25 +30,11 @@ ATTN_BLOCK_OVERRIDE = None
 # backward, used for training) | 'pallas' (repro/kernels/flash_attention.py,
 # forward-only — serving/prefill on TPU; interpret mode on CPU) — is the
 # active KernelPlan's ``attn_impl`` (plan-scoped; no module-global state).
-# ``layers.ATTN_IMPL`` survives as a deprecated alias: reads resolve to the
-# active plan, and a legacy assignment (``layers.ATTN_IMPL = 'pallas'``)
-# lands in the module dict where ``_attn_impl`` honors it — the old
-# behavior, never a silent no-op. Precedence: an explicitly scoped plan
-# (``use_kernel_plan``, e.g. a plan-built train step's trace) > the legacy
-# module global > the process-default plan — a stale legacy assignment can
-# never override a plan someone scoped on purpose.
-def __getattr__(name: str):
-    if name == "ATTN_IMPL":
-        return current_kernel_plan().attn_impl
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
-
+# Tombstone: the PR 4 module-global alias (and its __getattr__ shim) is
+# deleted; lint rule SL004 forbids the symbol repo-wide. Scope a plan with
+# use_kernel_plan to select an implementation.
 def _attn_impl() -> str:
-    scoped = scoped_kernel_plan()
-    if scoped is not None:
-        return scoped.attn_impl
-    legacy = globals().get("ATTN_IMPL")
-    return legacy if legacy is not None else current_kernel_plan().attn_impl
+    return current_kernel_plan().attn_impl
 
 
 def no_constrain(x, _name):

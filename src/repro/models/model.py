@@ -158,7 +158,7 @@ def _dense_block(lp, h, cfg, rules, sac: str, causal=True):
     return cons(h, "act_btd")
 
 
-def _moe_block(lp, h, cfg, rules, sac: str, mesh):
+def _moe_block(lp, h, cfg, rules, sac: str, mesh, placement=None):
     cons = rules.constrain if rules else (lambda x, n: x)
     ep_axis = rules.ep_axis if rules else None
     tp_axis = rules.tp_axis if rules else None
@@ -178,7 +178,8 @@ def _moe_block(lp, h, cfg, rules, sac: str, mesh):
     moe = _sac(lambda q, x: moe_lib.sparse_moe_block(
         q, x, cfg, mesh=mesh_eff, ep_axis=ep_axis or "model",
         batch_axes=batch_axes, constrain=cons,
-        c_align=c_align, tp_mesh=tp_mesh, tp_axis=tp_axis), "moe", sac)
+        c_align=c_align, tp_mesh=tp_mesh, tp_axis=tp_axis,
+        placement=placement), "moe", sac)
     h = h + attn(lp["attn"], L.apply_norm(lp["ln1"], h, cfg.norm))
     mo, aux, z, stats = moe(lp["moe"], L.apply_norm(lp["ln2"], h, cfg.norm))
     h = h + mo
@@ -218,20 +219,25 @@ def _scan_layers(stacked, h, body, sac: str):
     return h
 
 
-def _scan_layers_aux(stacked, h, body, sac: str, num_experts: int):
-    """Like _scan_layers but body returns (h, aux, z, MoeStats) — aux
-    losses and routing telemetry accumulated (summed) across layers."""
+def _scan_layers_aux(stacked, h, body, sac: str, num_experts: int,
+                     placement=None):
+    """Like _scan_layers but body(lp, h, pl) returns (h, aux, z, MoeStats)
+    — aux losses and routing telemetry accumulated (summed) across layers.
+    ``placement``: optional (L, E) int32 inverse placement rows scanned
+    alongside the stacked params, so each layer dispatches against its own
+    row (None — an empty pytree — scans through untouched)."""
     fn = block_remat(body, sac)
 
-    def step(carry, lp):
+    def step(carry, xs):
+        lp, pl = xs
         h, aux, z, st = carry
-        h, a, zz, s = fn(lp, h)
+        h, a, zz, s = fn(lp, h, pl)
         return (h, aux + a, z + zz, st + s), None
 
     (h, aux, z, st), _ = jax.lax.scan(
         step, (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
                moe_lib.MoeStats.zero(num_experts)),
-        stacked)
+        (stacked, placement))
     return h, aux, z, st
 
 
@@ -241,8 +247,12 @@ def _scan_layers_aux(stacked, h, body, sac: str, num_experts: int):
 
 def forward(params, batch: dict, cfg: ModelConfig, *,
             rules=None, mesh=None, sac: str = "block",
-            compute_dtype=jnp.bfloat16):
-    """Returns (logits (B, S_out, V_pad), aux_losses dict)."""
+            compute_dtype=jnp.bfloat16, placement=None):
+    """Returns (logits (B, S_out, V_pad), aux_losses dict).
+
+    ``placement``: optional (L, E) int32 inverse expert-placement rows
+    (global expert id -> stored position per layer; parallel/placement.py)
+    when the stacked MoE expert weights live in a re-placed order."""
     cons = rules.constrain if rules else (lambda x, n: x)
     aux = {"moe_aux": jnp.zeros((), jnp.float32),
            "moe_z": jnp.zeros((), jnp.float32)}
@@ -275,8 +285,9 @@ def forward(params, batch: dict, cfg: ModelConfig, *,
         elif at == "moe":
             h, a, z, st = _scan_layers_aux(
                 params["layers"], h,
-                lambda lp, hh: _moe_block(lp, hh, cfg, rules, sac, mesh), sac,
-                cfg.moe.num_experts)
+                lambda lp, hh, pl: _moe_block(lp, hh, cfg, rules, sac, mesh,
+                                              placement=pl),
+                sac, cfg.moe.num_experts, placement=placement)
             aux["moe_aux"], aux["moe_z"] = a, z
             aux["moe_stats"] = st
         elif at == "ssm":
@@ -329,10 +340,11 @@ def masked_ce(logits, labels, cfg: ModelConfig):
 
 
 def loss_fn(params, batch, cfg: ModelConfig, *, rules=None, mesh=None,
-            sac: str = "block", compute_dtype=jnp.bfloat16):
+            sac: str = "block", compute_dtype=jnp.bfloat16, placement=None):
     """Next-token cross entropy (+ MoE aux losses). labels = -100 masked."""
     logits, aux = forward(params, batch, cfg, rules=rules, mesh=mesh,
-                          sac=sac, compute_dtype=compute_dtype)
+                          sac=sac, compute_dtype=compute_dtype,
+                          placement=placement)
     labels = batch["labels"]
     if cfg.arch_type == "vlm":   # prefix image positions produce no loss
         logits = logits[:, cfg.num_prefix_embeds:]
@@ -383,8 +395,9 @@ def pipeline_stage_forward(stage_lp, h, cfg: ModelConfig, *, sac: str = ""):
     if at == "moe":
         return _scan_layers_aux(
             stage_lp, h,
-            lambda lp, hh: _moe_block(lp, hh, cfg, None, sac, None), sac,
-            cfg.moe.num_experts)
+            lambda lp, hh, pl: _moe_block(lp, hh, cfg, None, sac, None,
+                                          placement=pl),
+            sac, cfg.moe.num_experts)
     if at == "dense":
         h = _scan_layers(stage_lp, h,
                          lambda lp, hh: _dense_block(lp, hh, cfg, None, sac),

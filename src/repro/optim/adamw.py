@@ -34,9 +34,33 @@ def adamw_init(params) -> AdamWState:
                       jax.tree.map(zeros, params))
 
 
-def global_norm(grads) -> jax.Array:
-    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
-              for g in jax.tree.leaves(grads)]
+def expert_slice_sumsq(g, inv=None) -> jax.Array:
+    """Squared-sum of an (L, E, ...) expert-stack grad with a *canonical*
+    association: per-(layer, expert) slice sums first, reordered to
+    global-id order when a live placement permutes the stack (``inv`` is
+    the (L, E) global-id -> position map), then one fixed-order (L, E)
+    reduction. A placement change moves slices between ranks but never
+    changes which elements a slice sum covers or the order the slice sums
+    combine in, so the grad-norm — and through it the clip scale — is
+    bit-identical across a rebalance."""
+    s = jnp.sum(jnp.square(g.astype(jnp.float32)),
+                axis=tuple(range(2, g.ndim)))
+    if inv is not None:
+        s = jnp.take_along_axis(s, inv, axis=1)
+    return jnp.sum(s)
+
+
+def global_norm(grads, *, expert_norm=None) -> jax.Array:
+    """Global L2 norm of a grad tree. ``expert_norm``, when given, is a
+    ``(mask, inv)`` pair (see ``parallel.placement.expert_leaf_mask``):
+    leaves flagged in ``mask`` contribute via ``expert_slice_sumsq`` so the
+    norm is invariant under live expert placement; ``None`` keeps the plain
+    whole-leaf sums."""
+    mask = expert_norm[0] if expert_norm is not None else ()
+    inv = expert_norm[1] if expert_norm is not None else None
+    leaves = [expert_slice_sumsq(g, inv) if i < len(mask) and mask[i]
+              else jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for i, g in enumerate(jax.tree.leaves(grads))]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
@@ -68,12 +92,15 @@ def adamw_leaf(g, master, m, v, *, scale, lr, bc1, bc2, beta1, beta2, eps,
 
 def adamw_update(grads, state: AdamWState, *, lr, beta1=0.9, beta2=0.99,
                  eps=1e-8, weight_decay=0.1, grad_clip=1.0,
-                 clip_enabled=None, param_dtype=jnp.float32):
+                 clip_enabled=None, param_dtype=jnp.float32,
+                 expert_norm=None):
     """One optimizer step. ``lr`` may be a traced scalar (schedule output).
     ``clip_enabled``: optional traced bool (paper clips only after warmup).
+    ``expert_norm``: optional ``(mask, inv)`` making the grad-norm invariant
+    under live expert placement (see ``global_norm``).
     Returns (new_params(param_dtype), new_state, metrics)."""
     step = state.step + 1
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads, expert_norm=expert_norm)
     scale = clip_scale(gnorm, grad_clip, clip_enabled)
 
     t = step.astype(jnp.float32)

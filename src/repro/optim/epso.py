@@ -109,6 +109,25 @@ def optimizer_state_specs(params, rules: ShardingRules, mode: str = "epso"):
     return jax.tree.map(one, pspecs, params)
 
 
+def permute_expert_states(opt_state, rel, *, num_layers: int,
+                          num_experts: int):
+    """Move the SO/EPSO-sharded AdamW states with their params across an
+    expert-placement change (parallel/placement.py).
+
+    master/m/v mirror the param tree and the SO/EPSO state specs *extend*
+    the param specs (``_augment`` only adds axes to still-unsharded dims),
+    so the identical expert-dim gather ``rel`` applies to the states keeps
+    every fp32 shard glued to its (possibly bf16) param — on an EPSO mesh
+    XLA lowers the jitted gather to the placement all-to-all for states
+    exactly as for params. Pure data movement; the update-bucket schedule
+    (``plan_update_buckets``) is invariant because it reads only shapes and
+    specs, which a permutation along an existing dim cannot change."""
+    from repro.parallel.placement import permute_expert_tree
+    mv = lambda t: permute_expert_tree(t, rel, num_layers, num_experts)
+    return opt_state._replace(master=mv(opt_state.master),
+                              m=mv(opt_state.m), v=mv(opt_state.v))
+
+
 def optimizer_state_shardings(params, rules: ShardingRules, mode: str):
     if rules.mesh is None:
         return None

@@ -30,11 +30,23 @@ one fully-manual ``shard_map`` region over the whole mesh:
 Because buckets only depend on their own leaves' gradient shards (plus the
 one clip scalar), the scheduler is free to start a bucket's gather while
 other buckets (and, on async backends, the tail of backward) are still
-computing — nothing serializes on a single whole-tree gather. The update
+computing — nothing serializes on a single whole-tree gather.
+
+Expert placement (parallel/placement.py): a live EP rebalance permutes the
+expert stacks (and, via ``epso.permute_expert_states``, master/m/v) along
+their existing expert dim — shapes and specs are unchanged, so the bucket
+schedule (``UpdatePlan``) and this region's lowering are placement-
+invariant; the rebuilt step after a rebalance re-plans to the identical
+buckets (pinned by tests/test_placement.py). Expert-stack leaves take a
+*canonical* grad-norm path (``expert_norm``): per-(layer, expert) slice
+sums gathered into a replicated (L, E) table, reordered to global-id
+order, reduced in fixed order — so the clip scale is bit-identical across
+a rebalance even though the shard-local partials regroup. The update
 math is ``adamw_leaf`` with the same clip/LR scalars as the eager path; the
-only numerical difference is the grad-norm's reduction order (shard-wise
-partial sums instead of whole-leaf sums), so eager and overlapped updates
-agree to ~1 ulp and checkpoint resume stays bit-identical.
+only numerical difference is the non-expert grad-norm's reduction order
+(shard-wise partial sums instead of whole-leaf sums), so eager and
+overlapped updates agree to ~1 ulp and checkpoint resume stays
+bit-identical.
 """
 from __future__ import annotations
 
@@ -46,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import manual_shard_map
 from repro.optim.adamw import AdamWState, adamw_leaf
-from repro.optim.epso import (DEFAULT_BUCKET_BYTES, UpdatePlan,
+from repro.optim.epso import (DEFAULT_BUCKET_BYTES, UpdatePlan, _entry_axes,
                               optimizer_state_specs, plan_update_buckets,
                               update_axis_order)
 from repro.parallel.sharding import param_specs
@@ -129,13 +141,20 @@ def overlapped_adamw_update(grads, state: AdamWState, *, rules, mode: str,
                             eps=1e-8, weight_decay=0.1, grad_clip=1.0,
                             clip_enabled=None, param_dtype=jnp.float32,
                             update_plan: Optional[UpdatePlan] = None,
-                            max_bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+                            max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                            expert_norm=None):
     """Drop-in replacement for ``adamw_update`` with bucketed, overlappable
     collectives. Same signature plus ``rules``/``mode``/``impl`` and an
     optional precomputed ``update_plan`` (built once at step-build time).
+    ``expert_norm`` is the ``(mask, inv)`` pair from
+    ``adamw.global_norm``: flagged expert-stack leaves contribute to the
+    grad-norm via per-(layer, expert) slice sums gathered to a replicated
+    (L, E) table, reordered to global-id order, and reduced in fixed order —
+    the same association the eager path uses, and invariant under live
+    expert placement, so the clip scale cannot drift across a rebalance.
     Returns (new_params(param_dtype), new_state, metrics) with identical
     semantics; see the module docstring for the one numerical difference
-    (grad-norm reduction order)."""
+    (grad-norm reduction order on non-expert leaves)."""
     if impl not in ("ring", "xla"):
         raise ValueError(f"impl must be 'ring' or 'xla', got {impl!r}")
     mesh = rules.mesh
@@ -159,10 +178,21 @@ def overlapped_adamw_update(grads, state: AdamWState, *, rules, mode: str,
     n = len(flat_g)
     assert update_plan.n_leaves == n, (update_plan.n_leaves, n)
 
+    ex_mask = expert_norm[0] if expert_norm is not None else ()
+    expert_ids = frozenset(i for i, m in enumerate(ex_mask) if m)
+    inv_const = None
+    if expert_norm is not None and expert_norm[1] is not None:
+        inv_const = jnp.asarray(expert_norm[1], jnp.int32)
+
     all_leaves = [lf for b in update_plan.buckets for lf in b.leaves]
-    norm_groups = {}          # psum axis set -> leaf indices
+    norm_groups = {}          # psum axis set -> leaf indices (non-expert)
+    expert_leaves = []        # canonical slice-sum norm path (global order)
     for lf in all_leaves:
-        norm_groups.setdefault(lf.psum_axes, []).append(lf.index)
+        if lf.index in expert_ids:
+            expert_leaves.append(lf)
+        else:
+            norm_groups.setdefault(lf.psum_axes, []).append(lf.index)
+    expert_leaves.sort(key=lambda lf: lf.index)
 
     def region(gs, ma, mo, vo, scalars):
         lrv, b1c, b2c, clip_on = scalars
@@ -176,6 +206,29 @@ def overlapped_adamw_update(grads, state: AdamWState, *, rules, mode: str,
             for i in idxs:
                 loc = loc + jnp.sum(jnp.square(gs[i].astype(jnp.float32)))
             total = total + (jax.lax.psum(loc, axes) if axes else loc)
+        # expert stacks: per-(L, E)-slice sums, un-sharded to a replicated
+        # (L, E) table (gather over the axes tiling dims 0/1, psum over the
+        # axes tiling the trailing dims), reordered to global-id order, then
+        # one fixed-order reduction — placement moves slices between ranks
+        # but never changes the association, so gnorm (and the clip scale)
+        # is bit-identical across a live rebalance
+        for lf in expert_leaves:
+            i = lf.index
+            s = jnp.sum(jnp.square(gs[i].astype(jnp.float32)),
+                        axis=tuple(range(2, gs[i].ndim)))
+            spec = ospecs[i]
+            lead = []
+            for d in (0, 1):
+                ent = spec[d] if d < len(spec) else None
+                for a in reversed(_entry_axes(ent)):
+                    s = jax.lax.all_gather(s, a, axis=d, tiled=True)
+                    lead.append(a)
+            trail = tuple(a for a in lf.psum_axes if a not in lead)
+            if trail:
+                s = jax.lax.psum(s, trail)
+            if inv_const is not None:
+                s = jnp.take_along_axis(s, inv_const, axis=1)
+            total = total + jnp.sum(s)
         gnorm = jnp.sqrt(total)
         if grad_clip <= 0:
             sc = jnp.float32(1.0)

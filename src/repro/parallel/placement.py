@@ -1,0 +1,331 @@
+"""Telemetry-driven expert placement and live EP rebalancing.
+
+The EP axis shards the stacked expert dim in *position* order: rank ``r``
+hosts positions ``[r*EL, (r+1)*EL)`` of every ``(L, E, ...)`` expert stack.
+By default position == global expert id (identity placement), so a hot
+expert pins its rank at the top of every dispatch all-to-all while cold
+ranks idle — the load imbalance Pangu Ultra MoE (arXiv:2505.04519) shows
+dropless dispatch cannot pay for on its own.
+
+``ExpertPlacement`` decouples the two spaces: ``perm[l][pos]`` is the
+global expert id stored at placed position ``pos`` of layer ``l``. The
+model only ever needs the inverse map (``inverse_array()``: global id ->
+position) — the router keeps producing global ids and every dispatch path
+translates them to positions at dispatch time, so router weights, routing
+decisions and telemetry stay in global-id space while the expert stacks
+(and their EPSO-sharded optimizer states) live wherever the placement puts
+them.
+
+Rebalancing is *numerics-preserving by construction*: a placement change
+is pure data movement (same experts, new homes). Token->expert assignment,
+per-expert pool order (stable argsort over translated ids preserves
+within-expert token order), capacity-drop sets and the expert-local matmuls
+are all invariant; for ``experts_per_token <= 2`` the EP combine-psum's
+per-token sum is a reordering of at most two addends plus exact ``+0.0``
+terms, so losses are bit-identical across a rebalance event (pinned by
+``tests/test_placement.py``). For ``top_k >= 3`` the combine may
+reassociate (still exact to float addition reordering, not bitwise). On
+the update side, the global grad-norm (clip scale) is made
+placement-invariant by construction: expert-stack leaves contribute
+per-(layer, expert) slice sums reduced in global-id order in both the
+eager and overlapped optimizer paths (``expert_leaf_mask`` +
+``adamw.expert_slice_sumsq``), so moving expert shards between ranks
+cannot reassociate the norm.
+
+The host-side loop (``RebalanceController``): aggregate the per-step
+``moe_counts`` telemetry over a window of N steps; at each window boundary
+compute the rank-level imbalance (max/mean rank load under the live
+placement — the component of expert imbalance a placement can actually
+fix); when it exceeds the threshold, propose a greedy LPT placement
+(experts by descending windowed load onto the least-loaded rank with free
+slots) and adopt it only if it strictly improves the imbalance — intrinsic
+routing skew below what LPT can fix must not re-trigger every window.
+
+Telemetry counts are summed over layers (the scan accumulates one
+``MoeStats``), so the controller broadcasts one permutation to all layers;
+the ``ExpertPlacement`` API itself is per-layer and the model threads
+per-layer rows through the layer scan, so heterogeneous placements (e.g.
+from offline per-layer profiles) work everywhere downstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _as_rows(perm) -> Tuple[Tuple[int, ...], ...]:
+    return tuple(tuple(int(v) for v in row) for row in perm)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlacement:
+    """Per-layer expert->position permutation. ``perm[l][pos]`` = global
+    expert id physically stored at placed position ``pos`` (EP rank
+    ``pos // (E/ep)``) in layer ``l``. Identity by default everywhere a
+    placement is optional."""
+    num_layers: int
+    num_experts: int
+    perm: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        rows = _as_rows(self.perm)
+        object.__setattr__(self, "perm", rows)
+        if len(rows) != self.num_layers:
+            raise ValueError(f"placement has {len(rows)} rows for "
+                             f"num_layers={self.num_layers}")
+        want = tuple(range(self.num_experts))
+        for l, row in enumerate(rows):
+            if tuple(sorted(row)) != want:
+                raise ValueError(
+                    f"placement row {l} is not a permutation of "
+                    f"0..{self.num_experts - 1}: {row}")
+
+    # ---- constructors ------------------------------------------------------
+    @classmethod
+    def identity(cls, num_layers: int, num_experts: int) -> "ExpertPlacement":
+        row = tuple(range(num_experts))
+        return cls(num_layers, num_experts, (row,) * num_layers)
+
+    @classmethod
+    def broadcast(cls, row: Sequence[int],
+                  num_layers: int) -> "ExpertPlacement":
+        """One permutation applied to every layer (the telemetry-driven
+        case: counts are layer-summed, so the controller proposes one row)."""
+        r = tuple(int(v) for v in row)
+        return cls(num_layers, len(r), (r,) * num_layers)
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def is_identity(self) -> bool:
+        ident = tuple(range(self.num_experts))
+        return all(row == ident for row in self.perm)
+
+    def perm_array(self) -> np.ndarray:
+        """(L, E) int32: position -> global expert id."""
+        return np.array(self.perm, dtype=np.int32)
+
+    def inverse_array(self) -> np.ndarray:
+        """(L, E) int32: global expert id -> placed position. This is the
+        only map the model needs (dispatch-time id translation)."""
+        return np.argsort(self.perm_array(), axis=1).astype(np.int32)
+
+    def relative_to(self, new: "ExpertPlacement") -> np.ndarray:
+        """(L, E) int32 gather map moving *live* arrays from this placement
+        to ``new``: ``W_new[l, pos] = W_live[l, rel[l, pos]]``. Derivation:
+        ``W_live[p] = W_global[perm[p]]`` and we want
+        ``W_new[pos] = W_global[new.perm[pos]]``, so
+        ``rel[pos] = inv[new.perm[pos]]``."""
+        if (new.num_layers, new.num_experts) != (self.num_layers,
+                                                 self.num_experts):
+            raise ValueError(f"placement shape mismatch: "
+                             f"({self.num_layers},{self.num_experts}) vs "
+                             f"({new.num_layers},{new.num_experts})")
+        inv = self.inverse_array()
+        return np.take_along_axis(inv, new.perm_array(), axis=1)
+
+    # ---- manifest serialization (checkpoint/checkpointer.py) ---------------
+    def to_manifest(self) -> dict:
+        return {"num_layers": self.num_layers,
+                "num_experts": self.num_experts,
+                "perm": [list(row) for row in self.perm]}
+
+    @classmethod
+    def from_manifest(cls, d: Optional[dict]) -> Optional["ExpertPlacement"]:
+        if d is None:
+            return None
+        return cls(int(d["num_layers"]), int(d["num_experts"]),
+                   _as_rows(d["perm"]))
+
+
+# ----------------------------------------------------------------------------
+# load metrics + the greedy (LPT) balancing permutation
+# ----------------------------------------------------------------------------
+
+def rank_loads(counts, perm_row: Sequence[int], ep: int) -> np.ndarray:
+    """(ep,) summed expert load per EP rank under one placement row.
+    ``counts`` is in global-id space (the telemetry's space)."""
+    c = np.array(counts, dtype=np.float64)
+    E = c.shape[0]
+    if E % ep:
+        raise ValueError(f"ep={ep} does not divide num_experts={E}")
+    placed = c[np.array(perm_row, dtype=np.int64)]     # position order
+    return placed.reshape(ep, E // ep).sum(axis=1)
+
+
+def imbalance(counts, perm_row: Sequence[int], ep: int) -> float:
+    """max/mean rank load (>= 1.0; 1.0 = perfectly balanced or no load)."""
+    loads = rank_loads(counts, perm_row, ep)
+    mean = loads.mean()
+    return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def greedy_perm(counts, ep: int) -> Tuple[int, ...]:
+    """LPT scheduling: experts by descending windowed load, each assigned to
+    the least-loaded rank with a free slot (E/ep slots per rank). Ties break
+    deterministically (stable sort; lowest rank id). Within a rank, slots
+    are ordered by global id for a canonical form. Returns a position ->
+    global-id row."""
+    c = np.array(counts, dtype=np.float64)
+    E = c.shape[0]
+    if E % ep:
+        raise ValueError(f"ep={ep} does not divide num_experts={E}")
+    slots = E // ep
+    order = np.argsort(-c, kind="stable")
+    loads = np.zeros(ep)
+    members = [[] for _ in range(ep)]
+    for g in order:
+        open_ranks = [r for r in range(ep) if len(members[r]) < slots]
+        r = min(open_ranks, key=lambda r: (loads[r], r))
+        members[r].append(int(g))
+        loads[r] += c[g]
+    return tuple(v for m in members for v in sorted(m))
+
+
+# ----------------------------------------------------------------------------
+# applying a placement change to live state
+# ----------------------------------------------------------------------------
+
+def is_expert_stack(path: str, shape, num_layers: int,
+                    num_experts: int) -> bool:
+    """True for the routed expert-stack leaves a placement permutes:
+    ``layers/moe/{gate,up,down}`` with a leading (L, E, ...) — never the
+    router (global-id space by design), never shared experts (not routed)."""
+    if "moe" not in path or "shared" in path:
+        return False
+    leaf = path.rsplit("/", 1)[-1]
+    return (leaf in ("gate", "up", "down") and len(shape) >= 3
+            and shape[0] == num_layers and shape[1] == num_experts)
+
+
+def permute_expert_tree(tree, rel: np.ndarray, num_layers: int,
+                        num_experts: int):
+    """Gather every expert-stack leaf's E dim by ``rel`` (see
+    ``ExpertPlacement.relative_to``): ``leaf[l, pos] <- leaf[l, rel[l, pos]]``.
+    Non-expert leaves pass through untouched. Works on a params tree or any
+    tree mirroring it (EPSO master/m/v)."""
+    import jax
+    import jax.numpy as jnp
+
+    idx = jnp.array(rel, dtype=jnp.int32)
+
+    def visit(path_parts, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_parts)
+        if not is_expert_stack(path, leaf.shape, num_layers, num_experts):
+            return leaf
+        return jax.vmap(lambda w, p: jnp.take(w, p, axis=0))(leaf, idx)
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def expert_leaf_mask(tree, num_layers: int,
+                     num_experts: int) -> Tuple[bool, ...]:
+    """Per-leaf booleans in ``jax.tree.flatten`` order: True where the leaf
+    is a routed expert stack (see ``is_expert_stack``). The optimizer paths
+    use this to give expert leaves a placement-invariant grad-norm
+    contribution (per-(layer, expert) slice sums reduced in global-id
+    order), so the clip scale cannot reassociate when a rebalance moves
+    expert shards across ranks."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path_parts, leaf in flat:
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_parts)
+        out.append(bool(is_expert_stack(path, leaf.shape, num_layers,
+                                        num_experts)))
+    return tuple(out)
+
+
+def apply_placement(state, current: ExpertPlacement, new: ExpertPlacement,
+                    num_layers: int, num_experts: int):
+    """Move a live TrainState from ``current`` to ``new`` placement: the
+    expert stacks in ``params`` AND the EPSO-sharded optimizer state move
+    together (master/m/v mirror the param tree, and the EPSO state specs
+    extend the param specs, so the same dim-1 gather applies uniformly —
+    each state shard follows its param to the new rank). Pure data movement:
+    no arithmetic, numerics-preserving by construction. The caller jits this
+    (launch/train.py does, donating the state and pinning out_shardings) so
+    XLA lowers the cross-rank gathers to the placement all-to-all."""
+    from repro.optim.epso import permute_expert_states
+    rel = current.relative_to(new)
+    mv = lambda t: permute_expert_tree(t, rel, num_layers, num_experts)
+    new_opt = permute_expert_states(state.opt, rel, num_layers=num_layers,
+                                    num_experts=num_experts)
+    return state._replace(params=mv(state.params), opt=new_opt)
+
+
+# ----------------------------------------------------------------------------
+# host-side windowed controller (launch/train.py)
+# ----------------------------------------------------------------------------
+
+class RebalanceController:
+    """Aggregates per-step ``moe_counts`` (global-id space, host side) over
+    ``interval``-step windows and proposes greedy placements when the live
+    rank imbalance exceeds ``threshold``. Owns the live placement."""
+
+    def __init__(self, *, num_layers: int, num_experts: int, ep: int,
+                 interval: int, threshold: float,
+                 placement: Optional[ExpertPlacement] = None):
+        if interval < 1:
+            raise ValueError(f"rebalance interval must be >= 1, "
+                             f"got {interval}")
+        if threshold < 1.0:
+            raise ValueError(f"rebalance threshold is a max/mean ratio, "
+                             f"must be >= 1.0, got {threshold}")
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.ep = ep
+        self.interval = interval
+        self.threshold = threshold
+        self.placement = placement or ExpertPlacement.identity(num_layers,
+                                                               num_experts)
+        self.window = np.zeros(num_experts, dtype=np.float64)
+        self.steps_in_window = 0
+        self.rebalances = 0
+
+    def observe(self, counts) -> float:
+        """Fold one step's (E,) counts into the window; returns the live
+        rank imbalance of this step's counts under the current placement
+        (the per-step log metric)."""
+        c = np.array(counts, dtype=np.float64)
+        self.window += c
+        self.steps_in_window += 1
+        return imbalance(c, self.placement.perm[0], self.ep)
+
+    def window_full(self) -> bool:
+        return self.steps_in_window >= self.interval
+
+    def reset_window(self) -> None:
+        """Drop the partial window (relaunch/rollback: the replayed steps
+        would otherwise be double-counted)."""
+        self.window = np.zeros(self.num_experts, dtype=np.float64)
+        self.steps_in_window = 0
+
+    def propose(self, *, force: bool = False) -> Optional[ExpertPlacement]:
+        """At a window boundary (or forced): greedy placement from the
+        windowed counts. Adopts + returns the new placement when it strictly
+        improves the windowed rank imbalance and (unless forced) the current
+        imbalance exceeds the threshold; otherwise returns None. Resets the
+        window either way."""
+        counts, n = self.window, self.steps_in_window
+        self.window = np.zeros(self.num_experts, dtype=np.float64)
+        self.steps_in_window = 0
+        if n == 0 or counts.sum() <= 0:
+            return None
+        cur = imbalance(counts, self.placement.perm[0], self.ep)
+        if not force and cur <= self.threshold:
+            return None
+        row = greedy_perm(counts, self.ep)
+        if imbalance(counts, row, self.ep) >= cur and not (
+                force and row != self.placement.perm[0]):
+            return None
+        new = ExpertPlacement.broadcast(row, self.num_layers)
+        if new == self.placement:
+            return None
+        self.placement = new
+        self.rebalances += 1
+        return new

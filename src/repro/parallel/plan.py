@@ -2,9 +2,9 @@
 
 One frozen object is the single source of truth for how a run maps onto
 hardware, replacing the positional ``--mesh dp,pp,model`` spec + scattered
-kwargs (``rules`` / ``mesh`` / ``opt_sharding_mode`` / ``pp_stages``) and the
-module-global kernel knobs (``kernels.ops.KERNEL_CONFIG``,
-``models.layers.ATTN_IMPL``).
+kwargs (``rules`` / ``mesh`` / ``opt_sharding_mode`` / ``pp_stages``) and
+the retired module-global kernel knobs (the PR 4 compatibility aliases are
+deleted; lint rule SL004 tombstones the symbols repo-wide).
 
 Axes and their roles (every axis is explicit — no role inference on a
 shared 'model' axis):
@@ -41,7 +41,7 @@ from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 # ----------------------------------------------------------------------------
-# KernelPlan — plan-scoped replacement for KERNEL_CONFIG / ATTN_IMPL
+# KernelPlan — plan-scoped replacement for the retired module-global knobs
 # ----------------------------------------------------------------------------
 
 _BACKENDS = ("ref", "pallas", "xla")
@@ -136,7 +136,7 @@ class KernelPlan:
 
 
 # The active kernel plan: a contextvar (scoped, restores on exit) over a
-# mutable process default (what the deprecated KERNEL_CONFIG alias edits).
+# mutable process default (set_default_kernel_plan).
 _DEFAULT_KERNEL_PLAN = [KernelPlan()]
 _ACTIVE_KERNEL_PLAN: contextvars.ContextVar[Optional[KernelPlan]] = \
     contextvars.ContextVar("repro_kernel_plan", default=None)
@@ -150,28 +150,20 @@ def current_kernel_plan() -> KernelPlan:
 
 def default_kernel_plan() -> KernelPlan:
     """The process-default kernel plan (what applies outside any
-    ``use_kernel_plan`` scope — the deprecated KERNEL_CONFIG alias's
-    backing store)."""
+    ``use_kernel_plan`` scope)."""
     return _DEFAULT_KERNEL_PLAN[0]
 
 
-def scoped_kernel_plan() -> Optional[KernelPlan]:
-    """The explicitly scoped plan (innermost ``use_kernel_plan``), or None
-    outside any scope. Lets deprecated module-global fallbacks yield to an
-    explicit scope without shadowing it."""
-    return _ACTIVE_KERNEL_PLAN.get()
-
-
 def set_default_kernel_plan(plan: KernelPlan) -> None:
-    """Replace the process-default kernel plan (the deprecated-alias path;
-    prefer the scoped ``use_kernel_plan``)."""
+    """Replace the process-default kernel plan (prefer the scoped
+    ``use_kernel_plan``)."""
     _DEFAULT_KERNEL_PLAN[0] = plan
 
 
 @contextlib.contextmanager
 def use_kernel_plan(plan: Optional[KernelPlan]):
     """Scope ``plan`` as the active kernel plan; always restores the previous
-    one — the leak-free replacement for mutating ``ops.KERNEL_CONFIG``.
+    one — the leak-free replacement for the retired mutable module globals.
     ``None`` is a no-op scope (callers can pass a maybe-plan through)."""
     if plan is None:
         yield None
@@ -238,6 +230,10 @@ class ParallelPlan:
     # MoE dispatch the plan pins across train/serve/dryrun/checkpoints:
     # None defers to the model's MoEConfig.dispatch
     moe_dispatch: Optional[str] = None   # None | capacity | dropless
+    # live EP rebalancing policy (parallel/placement.py): None/'off' = static
+    # identity placement; 'N:threshold' = every N steps, re-place experts
+    # when the windowed max/mean rank load exceeds threshold.
+    rebalance: Optional[str] = None      # None | off | '<int>:<float>'
     kernel: KernelPlan = field(default_factory=KernelPlan)
 
     def __post_init__(self):
@@ -262,6 +258,26 @@ class ParallelPlan:
                 self.moe_dispatch not in _MOE_DISPATCH:
             raise ValueError(f"moe_dispatch must be None or one of "
                              f"{_MOE_DISPATCH}, got {self.moe_dispatch!r}")
+        self.rebalance_params()          # validates the token's shape
+
+    def rebalance_params(self) -> Optional[Tuple[int, float]]:
+        """The parsed ``rebalance=`` policy: ``(interval_steps, threshold)``,
+        or None when rebalancing is off (token absent or 'off')."""
+        r = self.rebalance
+        if r is None or r == "off":
+            return None
+        try:
+            n_s, t_s = str(r).split(":", 1)
+            n, t = int(n_s), float(t_s)
+        except ValueError:
+            raise ValueError(
+                f"rebalance={r!r}: want 'off' or '<interval>:<threshold>' "
+                f"(e.g. rebalance=50:1.25 — every 50 steps, re-place when "
+                f"max/mean rank load exceeds 1.25)") from None
+        if n < 1 or t < 1.0:
+            raise ValueError(f"rebalance={r!r}: interval must be >= 1 and "
+                             f"threshold >= 1.0 (a max/mean ratio)")
+        return n, t
 
     # ---- spec string <-> plan ------------------------------------------------
     @classmethod
@@ -312,6 +328,8 @@ class ParallelPlan:
                 put("pp_impl", v)
             elif k in ("moe", "moe_dispatch"):
                 put("moe_dispatch", v)
+            elif k == "rebalance":
+                put("rebalance", v)
             elif k == "tiles":
                 put("tiles", v)
             elif k == "fsdp":
@@ -323,6 +341,7 @@ class ParallelPlan:
                     f"epso}}, overlap={{auto|off|ring|xla}}, "
                     f"schedule={{gpipe|1f1b}}, "
                     f"impl={{shardmap|masked}}, moe={{capacity|dropless}}, "
+                    f"rebalance={{off|N:threshold}}, "
                     f"tiles={{auto|TMxTKxTN}}, mb=<int>, fsdp")
         kw.update(overrides)
         tiles = kw.pop("tiles", None)
@@ -350,6 +369,8 @@ class ParallelPlan:
             parts.append(f"impl={self.pp_impl}")
         if self.moe_dispatch is not None:
             parts.append(f"moe={self.moe_dispatch}")
+        if self.rebalance is not None:
+            parts.append(f"rebalance={self.rebalance}")
         k = self.kernel
         if k.tiles == "auto":
             parts.append("tiles=auto")
@@ -427,6 +448,10 @@ class ParallelPlan:
             ids.append("no-gspmd-ragged-dot")
         if self.opt_shard == "epso":
             ids.append("epso-no-full-param-gather")
+        if self.rebalance_params() is not None:
+            # live placements must stay valid bijections (the census
+            # records the placement metadata the contract checks)
+            ids.append("placement-consistency")
         return tuple(ids)
 
     # ---- resolution ----------------------------------------------------------
@@ -439,6 +464,17 @@ class ParallelPlan:
                     f"plan pp={self.pp} does not divide {cfg.name}'s "
                     f"{cfg.num_layers} layers: each pipeline stage needs "
                     f"L/pp whole layers")
+        if self.rebalance_params() is not None:
+            if not getattr(cfg, "is_moe", False):
+                raise ValueError(
+                    f"plan rebalance={self.rebalance!r} but {cfg.name} has "
+                    f"no experts: rebalancing permutes MoE expert stacks")
+            if self.pp > 1:
+                raise NotImplementedError(
+                    f"rebalance={self.rebalance!r} with pp={self.pp}: live "
+                    f"placement is not threaded through the pipeline "
+                    f"executors yet (stage-sharded layer stacks would need "
+                    f"per-stage placement rows)")
         if self.ep > 1:
             if not getattr(cfg, "is_moe", False):
                 raise ValueError(
@@ -522,6 +558,18 @@ class ResolvedPlan:
     plan: ParallelPlan
     mesh: object = None           # jax.sharding.Mesh | None (single device)
     rules: object = None          # ShardingRules | None
+    # live ExpertPlacement (parallel/placement.py) baked into the step as a
+    # trace-time constant; None = identity. Rebalance events swap it via
+    # ``with_placement`` and rebuild the step (rare, so the recompile is
+    # cheaper than carrying the permutation as a traced input every step).
+    placement: object = None      # ExpertPlacement | None
+
+    def with_placement(self, placement) -> "ResolvedPlan":
+        """This plan with a different live placement (same mesh/rules —
+        a placement never changes shardings, only which expert lives at
+        which position)."""
+        import dataclasses
+        return dataclasses.replace(self, placement=placement)
 
     # ---- forwarding ----------------------------------------------------------
     @property

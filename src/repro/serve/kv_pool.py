@@ -44,7 +44,11 @@ class SlotKVPool:
         self.num_slots = num_slots
         self.max_len = max_len
         self.cache = init_cache(cfg, num_slots, max_len, dtype)
+        # deque carries the reuse ORDER; the mirror set makes the free()
+        # double-free check O(1) instead of an O(n) deque membership scan
+        # (it was the per-request hot path at high slot counts)
         self._free = deque(range(num_slots))
+        self._free_set = set(self._free)
 
     # ---- host-side bookkeeping ---------------------------------------------
     @property
@@ -52,17 +56,23 @@ class SlotKVPool:
         return len(self._free)
 
     def alloc(self) -> int:
-        """Claim a free slot (lowest-index first, keeping reuse patterns
-        deterministic for tests). Raises when the pool is exhausted —
-        admission control must check ``num_free`` first."""
+        """Claim a free slot (front of the free deque — most-recently-freed
+        first, else lowest index — keeping reuse patterns deterministic for
+        tests). Raises when the pool is exhausted — admission control must
+        check ``num_free`` first. O(1)."""
         if not self._free:
             raise RuntimeError("KV pool exhausted: no free slots")
-        return self._free.popleft()
+        slot = self._free.popleft()
+        self._free_set.discard(slot)
+        return slot
 
     def free(self, slot: int) -> None:
-        if slot in self._free or not 0 <= slot < self.num_slots:
+        """Return a slot to the pool; double-frees and out-of-range slots
+        raise. O(1)."""
+        if slot in self._free_set or not 0 <= slot < self.num_slots:
             raise ValueError(f"bad free of slot {slot}")
         self._free.appendleft(slot)
+        self._free_set.add(slot)
 
     # ---- device-side content -----------------------------------------------
     def reset_slot(self, slot: int) -> None:

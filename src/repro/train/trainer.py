@@ -16,6 +16,7 @@ engine's admission path).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -29,6 +30,7 @@ from repro.models import (init_params, loss_fn, forward,
 from repro.optim import adamw_init, adamw_update, warmup_cosine, AdamWState
 from repro.optim.epso import optimizer_state_shardings, plan_update_buckets
 from repro.optim.overlap import overlapped_adamw_update, resolve_opt_overlap
+from repro.parallel.placement import expert_leaf_mask
 from repro.parallel.pipeline import (check_pp_microbatches,
                                      pipelined_loss_and_grads,
                                      pipelined_loss_and_grads_per_stage,
@@ -66,9 +68,16 @@ def _resolve_rules(cfg, train, rules, mesh):
 def _unpack_plan(plan: Optional[ResolvedPlan], rules, mesh,
                  opt_sharding_mode):
     """A ResolvedPlan supplies rules/mesh/opt mode in one object; explicit
-    kwargs (the legacy threading) win when both are given — an explicit
-    ``opt_sharding_mode='none'`` disables sharding even alongside an EPSO
-    plan (only ``None`` means 'take the plan's mode')."""
+    kwargs (the legacy threading, now deprecated) win when both are given —
+    an explicit ``opt_sharding_mode='none'`` disables sharding even
+    alongside an EPSO plan (only ``None`` means 'take the plan's mode')."""
+    if rules is not None or mesh is not None:
+        warnings.warn(
+            "passing rules=/mesh= to the step builders is deprecated; "
+            "resolve a ParallelPlan and pass plan= instead "
+            "(ParallelPlan.parse('dp=...').resolve(cfg, ...)). Legacy mesh "
+            "strings are covered by ParallelPlan.from_legacy.",
+            DeprecationWarning, stacklevel=3)
     if plan is not None:
         rules = rules if rules is not None else plan.rules
         mesh = mesh if mesh is not None else plan.mesh
@@ -143,6 +152,13 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
                              "resolved plan")
         parallel = plan.parallel_config()
     kplan = plan.kernel if plan is not None else None
+    # live expert placement (parallel/placement.py): baked into the trace as
+    # an (L, E) inverse-permutation constant; identity stays None so the
+    # lowering (and census baselines) are untouched without rebalancing
+    pl_rows = None
+    pl_obj = plan.placement if plan is not None else None
+    if pl_obj is not None and not pl_obj.is_identity:
+        pl_rows = jnp.asarray(pl_obj.inverse_array(), jnp.int32)
     if (parallel.moe_dispatch is not None and cfg.moe is not None
             and cfg.moe.dispatch != parallel.moe_dispatch):
         # ParallelConfig is authoritative in the step builder, so every
@@ -160,6 +176,10 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
     if pp > 1 and cfg.arch_type not in PP_ARCH_TYPES:
         raise ValueError(f"pp_stages={pp} needs arch_type in {PP_ARCH_TYPES},"
                          f" not {cfg.arch_type!r}")
+    if pp > 1 and pl_rows is not None:
+        raise NotImplementedError(
+            "a non-identity expert placement is not threaded through the "
+            "pipeline executors yet (rebalance requires pp=1)")
     if (pp > 1 and parallel.pp_impl == "shardmap" and mesh is not None
             and "pp" in getattr(mesh, "shape", {})):
         # surface the wave-balance guardrail at build time, not first call
@@ -185,9 +205,24 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
             lambda: init_params(jax.random.PRNGKey(0), cfg))
         update_plan = plan_update_buckets(_shapes, rules, opt_sharding_mode)
 
+    # canonical expert grad-norm (optim/adamw.expert_slice_sumsq): expert
+    # stacks contribute per-(L, E)-slice sums reduced in global-id order, so
+    # the clip scale — the one scalar a rebalance could otherwise perturb
+    # through shard-partial reassociation — is placement-invariant. Always
+    # on for MoE configs so identity and placed traces share the association.
+    expert_norm = None
+    if cfg.moe is not None:
+        _shapes = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        _mask = expert_leaf_mask(_shapes, cfg.num_layers,
+                                 cfg.moe.num_experts)
+        if any(_mask):
+            expert_norm = (_mask, pl_rows)
+
     def loss_for(params, mb):
         return loss_fn(params, mb, cfg, rules=rules, mesh=mesh,
-                       sac=parallel.remat_policy, compute_dtype=cd)
+                       sac=parallel.remat_policy, compute_dtype=cd,
+                       placement=pl_rows)
 
     def split_mb(batch, n):
         """(B, ...) -> (n, B/n, ...) microbatch view — shared by the PP and
@@ -348,13 +383,15 @@ def make_train_step(cfg: ModelConfig, parallel: Optional[ParallelConfig],
                 impl=ov_impl, update_plan=update_plan, lr=lr,
                 beta1=train.beta1, beta2=train.beta2, eps=train.eps,
                 weight_decay=train.weight_decay, grad_clip=train.grad_clip,
-                clip_enabled=clip_on, param_dtype=pd)
+                clip_enabled=clip_on, param_dtype=pd,
+                expert_norm=expert_norm)
         else:
             new_params, new_opt, om = adamw_update(
                 grads, state.opt, lr=lr, beta1=train.beta1,
                 beta2=train.beta2, eps=train.eps,
                 weight_decay=train.weight_decay, grad_clip=train.grad_clip,
-                clip_enabled=clip_on, param_dtype=pd)
+                clip_enabled=clip_on, param_dtype=pd,
+                expert_norm=expert_norm)
         out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
         return TrainState(new_params, new_opt), out_metrics
 

@@ -127,19 +127,30 @@ def test_sl003_traced_override():
     assert _rules(vs) == ["SL003"]
 
 
-# --- SL004: deprecated kernel-knob writers --------------------------------
+# --- SL004: retired kernel-knob aliases are tombstoned --------------------
 
 @pytest.mark.parametrize("src", [
+    # writes
     "from repro.kernels import ops\nops.KERNEL_CONFIG['tile_m'] = 8",
     "import repro.models.layers as L\nL.ATTN_IMPL = 'pallas'",
     "KERNEL_CONFIG = make_config()",
+    # reads are violations too: the symbols no longer exist
+    "impl = layers.ATTN_IMPL",
+    "tm = ops.KERNEL_CONFIG['tile_m']",
+    # and so are imports of the retired names
+    "from repro.kernels.ops import KERNEL_CONFIG",
+    "from repro.models.layers import ATTN_IMPL as AI",
 ])
-def test_sl004_deprecated_alias_writes(src):
+def test_sl004_any_alias_occurrence(src):
     assert _rules(L.lint_source(src, "src/repro/new_tool.py")) == ["SL004"]
 
 
-def test_sl004_reads_are_fine():
-    src = "impl = layers.ATTN_IMPL\ntm = ops.KERNEL_CONFIG['tile_m']"
+def test_sl004_has_no_allowlist():
+    """The tombstone is absolute: no path is allowlisted, and string or
+    docstring mentions (docs, this test file) stay lint-clean."""
+    assert L.ALLOWLIST["SL004"] == ()
+    src = 'msg = "KERNEL_CONFIG and ATTN_IMPL are retired"\n' \
+          'def f():\n    "replaces ATTN_IMPL"\n'
     assert L.lint_source(src, "src/repro/new_tool.py") == []
 
 

@@ -151,10 +151,10 @@ def test_sharded_train_step_matches_single_device(mesh8):
     out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.compat import AxisType
         from repro.configs import get_config, reduced, TrainConfig, ParallelConfig
         from repro.train import init_state, make_train_step
-        from repro.parallel.sharding import make_rules, shardings
+        from repro.parallel.plan import ParallelPlan
+        from repro.parallel.sharding import shardings
         from repro.optim.epso import optimizer_state_shardings
 
         cfg = reduced(get_config("deepseek-7b"), d_model=64)
@@ -169,9 +169,9 @@ def test_sharded_train_step_matches_single_device(mesh8):
         s1, m1 = jax.jit(make_train_step(cfg, ParallelConfig(), tc))(state,
                                                                      batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
-        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
+        plan = ParallelPlan.from_legacy("2,4", cfg=cfg, opt_shard="epso") \
+            .resolve(cfg, global_batch=8)
+        rules, mesh = plan.rules, plan.mesh
         psh = shardings(state.params, rules)
         osh = optimizer_state_shardings(state.params, rules, "epso")
         sp = state._replace(
@@ -182,8 +182,7 @@ def test_sharded_train_step_matches_single_device(mesh8):
                 v=jax.tree.map(jax.device_put, state.opt.v, osh)))
         bsh = NamedSharding(mesh, P("data", None))
         bp = jax.tree.map(lambda a: jax.device_put(a, bsh), batch)
-        step2 = jax.jit(make_train_step(cfg, ParallelConfig(), tc,
-                                        rules=rules, mesh=mesh))
+        step2 = make_train_step(cfg, ParallelConfig(), tc, plan=plan)
         s2, m2 = step2(sp, bp)
         assert np.allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
         for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):

@@ -118,18 +118,15 @@ def test_so_epso_parity_and_bytes(mesh8):
     out = mesh8("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import ParallelConfig, TrainConfig, get_config, reduced
-        from repro.launch.mesh import make_sim_mesh
         from repro.optim.epso import state_bytes_per_device
-        from repro.parallel.sharding import make_rules
+        from repro.parallel.plan import ParallelPlan
         from repro.train import init_state, make_train_step
 
-        mesh = make_sim_mesh("4,2")
         cfg = reduced(get_config("mula-7b-a1b"), d_model=64)
         tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
                          grad_reduce_dtype="float32", lr_peak=1e-3,
                          lr_min=1e-4, warmup_steps=2, total_steps=10,
                          seq_len=32, global_batch=8)
-        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
         batches = []
         for s in range(10):
             t = jax.random.randint(jax.random.PRNGKey(100 + s), (8, 33), 0,
@@ -137,21 +134,22 @@ def test_so_epso_parity_and_bytes(mesh8):
             batches.append({"tokens": t[:, :-1], "labels": t[:, 1:]})
         results = {}
         for mode in ("so", "epso"):
-            state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                               opt_sharding_mode=mode)
-            fn = make_train_step(cfg, ParallelConfig(), tc, rules=rules,
-                                 mesh=mesh, opt_sharding_mode=mode)
+            plan = ParallelPlan.from_legacy("4,2", cfg=cfg, opt_shard=mode) \
+                .resolve(cfg, global_batch=8)
+            state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
+            fn = make_train_step(cfg, ParallelConfig(), tc, plan=plan)
             losses = []
             for b in batches:
                 state, m = fn(state, b)
                 losses.append(float(m["loss"]))
-            results[mode] = (state, losses)
+            results[mode] = (state, losses, plan.rules)
         lso, lep = results["so"][1], results["epso"][1]
         assert np.allclose(lso, lep, rtol=1e-5), (lso, lep)
         for a, b in zip(jax.tree.leaves(results["so"][0].params),
                         jax.tree.leaves(results["epso"][0].params)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-5)
         params = results["so"][0].params
+        rules = results["so"][2]
         so_b = state_bytes_per_device(params, rules, "so")
         ep_b = state_bytes_per_device(params, rules, "epso")
         assert ep_b < so_b, (ep_b, so_b)

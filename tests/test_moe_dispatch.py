@@ -343,8 +343,8 @@ def test_c_align_parity_gap_closed_by_dropless_mesh8(mesh8):
         import jax, numpy as np
         from repro.configs import get_config, reduced, TrainConfig, ParallelConfig
         from repro.train import init_state, make_train_step, train_state_shardings
-        from repro.parallel.sharding import make_rules, batch_sharding
-        from repro.launch.mesh import make_sim_mesh
+        from repro.parallel.plan import ParallelPlan
+        from repro.parallel.sharding import batch_sharding
 
         cfg0 = reduced(get_config("mula-7b-a1b"), layers=2, d_model=64)
         cfg0 = dataclasses.replace(cfg0, moe=dataclasses.replace(
@@ -358,15 +358,16 @@ def test_c_align_parity_gap_closed_by_dropless_mesh8(mesh8):
         batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
         def run(mesh_spec, pp, dispatch):
-            mesh = make_sim_mesh(mesh_spec)
-            rules = make_rules(cfg0, mesh, kind="train", global_batch=8)
-            state = init_state(jax.random.PRNGKey(0), cfg0, tc, rules=rules)
+            plan = ParallelPlan.from_legacy(mesh_spec, cfg=cfg0) \
+                .resolve(cfg0, global_batch=8)
+            rules = plan.rules
+            state = init_state(jax.random.PRNGKey(0), cfg0, tc, plan=plan)
             ssh = train_state_shardings(state.params, rules, "none")
             par = ParallelConfig(microbatches=4, pp_stages=pp,
                                  pp_schedule="1f1b",
                                  pp_impl="masked" if pp > 1 else "shardmap",
                                  moe_dispatch=dispatch)
-            step = make_train_step(cfg0, par, tc, rules=rules, mesh=mesh,
+            step = make_train_step(cfg0, par, tc, plan=plan,
                                    state_shardings=ssh)
             bdev = jax.tree.map(
                 lambda a: jax.device_put(a, batch_sharding(rules)), batch)

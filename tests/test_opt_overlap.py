@@ -167,17 +167,14 @@ def test_overlap_golden_parity_mesh8(mesh8):
     out = mesh8("""
         import jax, numpy as np
         from repro.configs import ParallelConfig, TrainConfig, get_config, reduced
-        from repro.launch.mesh import make_sim_mesh
-        from repro.parallel.sharding import make_rules
+        from repro.parallel.plan import ParallelPlan
         from repro.train import init_state, make_train_step
 
-        mesh = make_sim_mesh("4,2")
         cfg = reduced(get_config("mula-7b-a1b"), d_model=64)
         tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
                          grad_reduce_dtype="float32", lr_peak=1e-3,
                          lr_min=1e-4, warmup_steps=2, total_steps=10,
                          seq_len=32, global_batch=8)
-        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
         batches = []
         for s in range(10):
             t = jax.random.randint(jax.random.PRNGKey(100 + s), (8, 33), 0,
@@ -185,11 +182,11 @@ def test_overlap_golden_parity_mesh8(mesh8):
             batches.append({"tokens": t[:, :-1], "labels": t[:, 1:]})
 
         def run(mode, overlap):
-            state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                               opt_sharding_mode=mode)
+            plan = ParallelPlan.from_legacy("4,2", cfg=cfg, opt_shard=mode) \
+                .resolve(cfg, global_batch=8)
+            state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
             fn = make_train_step(cfg, ParallelConfig(opt_overlap=overlap),
-                                 tc, rules=rules, mesh=mesh,
-                                 opt_sharding_mode=mode)
+                                 tc, plan=plan)
             losses = []
             for b in batches:
                 state, m = fn(state, b)

@@ -102,6 +102,42 @@ def test_parse_errors_are_descriptive():
         ParallelPlan.parse("dp=2,ep=4,dp=8")   # typo'd spec, never last-wins
 
 
+def test_parse_rebalance_token():
+    p = ParallelPlan.parse("dp=2,ep=2,opt=epso,rebalance=50:1.25")
+    assert p.rebalance == "50:1.25"
+    assert p.rebalance_params() == (50, 1.25)
+    assert "rebalance=50:1.25" in str(p)
+    assert ParallelPlan.parse(str(p)) == p
+    # off / absent both mean 'no policy'
+    assert ParallelPlan.parse("dp=2,ep=2,rebalance=off").rebalance_params() \
+        is None
+    assert ParallelPlan.parse("dp=2,ep=2").rebalance_params() is None
+    with pytest.raises(ValueError, match="interval"):
+        ParallelPlan.parse("dp=2,ep=2,rebalance=0:1.25")
+    with pytest.raises(ValueError, match="threshold"):
+        ParallelPlan.parse("dp=2,ep=2,rebalance=50:0.5")
+    with pytest.raises(ValueError, match="rebalance="):
+        ParallelPlan.parse("dp=2,ep=2,rebalance=always")
+
+
+def test_rebalance_contracts_and_validation():
+    # the plan declares the placement contract only when the policy is live
+    p = ParallelPlan.parse("dp=2,ep=2,opt=epso,rebalance=50:1.25")
+    assert "placement-consistency" in p.contracts()
+    assert "placement-consistency" not in \
+        ParallelPlan.parse("dp=2,ep=2,opt=epso").contracts()
+    # rebalancing permutes expert stacks: dense models have none
+    with pytest.raises(ValueError, match="no experts"):
+        ParallelPlan.parse("dp=2,rebalance=50:1.25").validate_model(
+            dense_cfg())
+    # pp>1 is explicitly unimplemented (stage-sharded layer stacks)
+    with pytest.raises(NotImplementedError, match="pipeline"):
+        ParallelPlan.parse("dp=2,pp=2,ep=2,rebalance=50:1.25") \
+            .validate_model(moe_cfg(E=4))
+    ParallelPlan.parse("dp=2,ep=2,rebalance=50:1.25").validate_model(
+        moe_cfg(E=4))
+
+
 def test_validate_model_divisibility():
     # ep on a dense model
     with pytest.raises(ValueError, match="has no experts"):
@@ -161,53 +197,40 @@ def test_kernel_plan_scoping_restores():
     assert ops.gmm_align() == base
 
 
-def test_kernel_config_deprecated_alias():
+def test_retired_aliases_are_tombstoned():
+    """The PR 4 compatibility aliases are deleted, not just deprecated:
+    the symbols no longer exist (lint rule SL004 forbids them repo-wide)."""
     from repro.kernels import ops
-    old = dict(ops.KERNEL_CONFIG)
-    assert set(old) == {"tile_m", "tile_k", "tile_n", "interpret"}
-    ops.KERNEL_CONFIG["tile_m"] = 8
-    assert ops.gmm_align() == 8 == current_kernel_plan().tile_m
-    ops.KERNEL_CONFIG.update(old)
-    assert ops.gmm_align() == old["tile_m"]
-    with pytest.raises(KeyError):
-        ops.KERNEL_CONFIG["nope"]
-
-
-def test_kernel_config_write_inside_scope_does_not_leak_scope():
-    # a legacy KERNEL_CONFIG write inside a use_kernel_plan scope must
-    # rebuild from the process DEFAULT, not bake the scoped values in
-    from repro.kernels import ops
-    from repro.parallel.plan import default_kernel_plan
-    old = dict(ops.KERNEL_CONFIG)
-    try:
-        with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
-                                                 tile_m=8)):
-            ops.KERNEL_CONFIG["interpret"] = True
-        assert default_kernel_plan().tile_m == old["tile_m"]   # not 8
-        assert default_kernel_plan().interpret is True
-    finally:
-        ops.KERNEL_CONFIG.update(old)
-
-
-def test_attn_impl_deprecated_alias():
     from repro.models import layers as L
-    assert L.ATTN_IMPL == current_kernel_plan().attn_impl == "blockwise"
+    # getattr with string names: SL004 forbids the bare identifiers even here
+    assert not hasattr(ops, "KERNEL_CONFIG")
+    with pytest.raises(AttributeError):
+        getattr(L, "ATTN_IMPL")
+    # the replacement path still answers the same question
+    assert L._attn_impl() == current_kernel_plan().attn_impl == "blockwise"
     with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
                                              attn_impl="pallas")):
-        assert L.ATTN_IMPL == "pallas"
-    assert L.ATTN_IMPL == "blockwise"
-    # a legacy *assignment* is honored by attention(), never a silent no-op
-    L.ATTN_IMPL = "pallas"
-    try:
-        assert L.ATTN_IMPL == "pallas" and L._attn_impl() == "pallas"
-        # ...but an explicitly scoped plan outranks the stale global
-        with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
-                                                 attn_impl="blockwise")):
-            assert L._attn_impl() == "blockwise"
         assert L._attn_impl() == "pallas"
-    finally:
-        del L.ATTN_IMPL
     assert L._attn_impl() == "blockwise"
+
+
+def test_default_kernel_plan_swap_and_scope_precedence():
+    """set_default_kernel_plan replaces the process default; a scoped
+    use_kernel_plan always outranks it and restores on exit."""
+    from repro.kernels import ops
+    from repro.parallel.plan import (default_kernel_plan,
+                                     set_default_kernel_plan)
+    old = default_kernel_plan()
+    try:
+        set_default_kernel_plan(dataclasses.replace(old, tile_m=8))
+        assert ops.gmm_align() == 8 == current_kernel_plan().tile_m
+        with use_kernel_plan(dataclasses.replace(current_kernel_plan(),
+                                                 tile_m=16)):
+            assert ops.gmm_align() == 16
+        assert ops.gmm_align() == 8
+    finally:
+        set_default_kernel_plan(old)
+    assert ops.gmm_align() == old.tile_m
 
 
 def test_kernel_plan_validation():

@@ -82,14 +82,19 @@ def test_pp_shardmap_rejects_indivisible_microbatches():
     cfg = reduced(get_config("mula-1b"), layers=2, d_model=32)
     mesh = AbstractMesh((2, 2), ("data", "pp"),
                         axis_types=(AxisType.Auto,) * 2)
-    with pytest.raises(ValueError, match="divisible by pp_stages"):
-        make_train_step(cfg, ParallelConfig(microbatches=3, pp_stages=2,
-                                            pp_impl="shardmap"),
-                        _tc(), mesh=mesh)
+    # mesh= is the deprecated legacy threading — this test doubles as the
+    # pinned DeprecationWarning check (an AbstractMesh has no device pool,
+    # so it cannot ride a resolved plan)
+    with pytest.warns(DeprecationWarning, match="plan="):
+        with pytest.raises(ValueError, match="divisible by pp_stages"):
+            make_train_step(cfg, ParallelConfig(microbatches=3, pp_stages=2,
+                                                pp_impl="shardmap"),
+                            _tc(), mesh=mesh)
     # the masked executor keeps accepting any n_mb >= 1
-    make_train_step(cfg, ParallelConfig(microbatches=3, pp_stages=2,
-                                        pp_impl="masked"),
-                    _tc(), mesh=mesh)
+    with pytest.warns(DeprecationWarning, match="plan="):
+        make_train_step(cfg, ParallelConfig(microbatches=3, pp_stages=2,
+                                            pp_impl="masked"),
+                        _tc(), mesh=mesh)
 
 
 def test_pp_step_rejects_non_uniform_arch():
@@ -123,10 +128,9 @@ def test_jitted_1f1b_grads_match_single_stage_on_mesh8(mesh8):
         import jax, numpy as np
         from repro.configs import get_config, reduced, TrainConfig, ParallelConfig
         from repro.train import init_state, make_train_step, train_state_shardings
-        from repro.parallel.sharding import make_rules, batch_sharding
-        from repro.launch.mesh import make_sim_mesh
+        from repro.parallel.plan import ParallelPlan
+        from repro.parallel.sharding import batch_sharding
 
-        mesh = make_sim_mesh("2,2,2")
         cfg = reduced(get_config("mula-7b-a1b"), layers=2, d_model=64)
         tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
                          grad_reduce_dtype="float32", lr_peak=1e-3,
@@ -140,18 +144,18 @@ def test_jitted_1f1b_grads_match_single_stage_on_mesh8(mesh8):
         s1, m1 = jax.jit(make_train_step(
             cfg, ParallelConfig(microbatches=4), tc))(state0, batch)
 
-        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
+        plan = ParallelPlan.from_legacy("2,2,2", cfg=cfg, opt_shard="epso") \
+            .resolve(cfg, global_batch=8)
+        rules = plan.rules
         assert rules.pp_axis == "pp", rules
-        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                           opt_sharding_mode="epso")
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
         wq = state.params["layers"]["attn"]["wq"]
         assert tuple(wq.sharding.spec) == ("pp", None, None), wq.sharding
         ssh = train_state_shardings(state.params, rules, "epso")
         step = make_train_step(
             cfg, ParallelConfig(microbatches=4, pp_stages=2,
                                 pp_schedule="1f1b", pp_impl="masked"),
-            tc, rules=rules, mesh=mesh, opt_sharding_mode="epso",
-            state_shardings=ssh)
+            tc, plan=plan, state_shardings=ssh)
         bsh = batch_sharding(rules)
         bdev = jax.tree.map(lambda a: jax.device_put(a, bsh), batch)
         s2, m2 = step(state, bdev)
@@ -183,10 +187,9 @@ def test_shardmap_executor_golden_parity_mesh8(mesh8):
         import jax, numpy as np
         from repro.configs import get_config, reduced, TrainConfig, ParallelConfig
         from repro.train import init_state, make_train_step, train_state_shardings
-        from repro.parallel.sharding import make_rules, batch_sharding
-        from repro.launch.mesh import make_sim_mesh
+        from repro.parallel.plan import ParallelPlan
+        from repro.parallel.sharding import batch_sharding
 
-        mesh = make_sim_mesh("2,2,2")
         cfg = reduced(get_config("mula-7b-a1b"), layers=2, d_model=64)
         tc = TrainConfig(param_dtype="float32", compute_dtype="float32",
                          grad_reduce_dtype="float32", lr_peak=1e-3,
@@ -196,9 +199,10 @@ def test_shardmap_executor_golden_parity_mesh8(mesh8):
                                   cfg.vocab_size)
         batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
-        rules = make_rules(cfg, mesh, kind="train", global_batch=8)
-        state = init_state(jax.random.PRNGKey(0), cfg, tc, rules=rules,
-                           opt_sharding_mode="epso")
+        plan = ParallelPlan.from_legacy("2,2,2", cfg=cfg, opt_shard="epso") \
+            .resolve(cfg, global_batch=8)
+        rules = plan.rules
+        state = init_state(jax.random.PRNGKey(0), cfg, tc, plan=plan)
         ssh = train_state_shardings(state.params, rules, "epso")
         bsh = batch_sharding(rules)
         bdev = jax.tree.map(lambda a: jax.device_put(a, bsh), batch)
@@ -208,8 +212,7 @@ def test_shardmap_executor_golden_parity_mesh8(mesh8):
             step = make_train_step(
                 cfg, ParallelConfig(microbatches=4, pp_stages=2,
                                     pp_schedule="1f1b", pp_impl=impl),
-                tc, rules=rules, mesh=mesh, opt_sharding_mode="epso",
-                state_shardings=ssh)
+                tc, plan=plan, state_shardings=ssh)
             outs[impl] = step(state, bdev)
         (s_m, m_m), (s_s, m_s) = outs["masked"], outs["shardmap"]
         # loss scalars: identical forward math => bit-equal
